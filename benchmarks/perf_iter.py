@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing (§Perf): hypothesis -> change -> re-lower -> measure.
+
+Three cells (chosen per the assignment):
+  A. kimi-k2-1t train_4k (most collective-bound): per-microbatch gradient
+     all-reduce dominates. Levers: ZeRO-sharded grad accumulator (AR -> RS),
+     bf16 accumulation.
+  B. gemma3-12b long_500k (worst roofline fraction, memory-bound): the
+     global-layer KV cache read dominates; at batch=1 the data axis idles.
+     Lever: shard kv_seq over ('data','model') = 256-way flash-decoding.
+  C. scheduler itself (most representative of the paper): vectorized HeRAD
+     and memoized 2CATAC vs the faithful reference implementations.
+
+Each experiment lowers baseline + optimized variants on the production mesh
+(reduced-depth unrolled analysis, extrapolated linearly in layer count) and
+prints the roofline terms. Results -> perf_out/*.json, cited in
+EXPERIMENTS.md §Perf.
+
+Run: PYTHONPATH=src python benchmarks/perf_iter.py [A|B|C] ...
+"""
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.roofline import _extrapolate, _fields  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    _cost_analysis_dict,
+    _decode_rules,
+    _memory_analysis_dict,
+    analysis_points,
+    build_lowerable,
+    collective_bytes,
+    train_config,
+)
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.specs import (  # noqa: E402
+    abstract_state_sharded,
+    batch_specs,
+    decode_specs,
+)
+from repro.models.config import SHAPES, get_config  # noqa: E402
+from repro.models.transformer import Model  # noqa: E402
+from repro.sharding import current_ctx, use_ctx  # noqa: E402
+from repro.train.step import grad_accum_axes, make_train_step  # noqa: E402
+
+OUT = Path(__file__).resolve().parents[1] / "perf_out"
+OUT.mkdir(exist_ok=True)
+
+
+def _analyse(fn, args, jit_kw) -> dict:
+    t0 = time.time()
+    compiled = jax.jit(fn, **jit_kw).lower(*args).compile()
+    rec = {"compile_s": round(time.time() - t0, 1)}
+    rec["memory"] = _memory_analysis_dict(compiled)
+    rec["cost"] = _cost_analysis_dict(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def _terms(fields: dict) -> dict:
+    return {
+        "compute_s": fields["flops"] / PEAK_FLOPS_BF16,
+        "collective_s": fields["coll_total"] / ICI_BW,
+        "coll_gib": fields["coll_total"] / 2**30,
+        "flops": fields["flops"],
+    }
+
+
+# ------------------------------------------------------------ experiment A
+def exp_a(n_mb: int, mesh) -> dict:
+    """kimi train, full step at reduced depth with the microbatch loop
+    unrolled — exact per-step collective accounting.
+
+    Finding from the dry-run breakdown: the collective term is dominated by
+    the per-layer-per-microbatch FSDP weight all-gather (~1 GiB/layer/mb),
+    NOT the gradient all-reduce (grads already reduce-scatter thanks to the
+    ZeRO-sharded accumulator). Lever: fewer/larger microbatches amortize the
+    gathers; per-layer remat keeps the activation live-set bounded.
+    """
+    cfg = get_config("kimi-k2-1t-a32b")
+    shape = SHAPES["train_4k"]
+    pts = []
+    for lbl, rcfg in analysis_points(cfg):
+        with use_ctx(mesh, unroll=True):
+            tcfg = dataclasses.replace(train_config(cfg),
+                                       n_microbatches=n_mb)
+            model = Model(rcfg)
+            state = abstract_state_sharded(model, tcfg)
+            pshard = jax.tree.map(
+                lambda s: getattr(s, "sharding", None), state["params"])
+            step = make_train_step(model, tcfg, param_shardings=pshard)
+            batch = batch_specs(rcfg, shape)
+            rec = _analyse(step, (state, batch), dict(donate_argnums=(0,)))
+            rec["n_layers"] = rcfg.n_layers
+            pts.append(rec)
+    full = _extrapolate(pts, cfg)
+    out = _terms(full)
+    if n_mb == 8:  # the dry-run already holds the full-depth memory gate
+        out["variant"] = "n_microbatches=8"
+        return out
+    # memory gate: compile the full-depth production program at this n_mb
+    with use_ctx(mesh, unroll=False):
+        tcfg = dataclasses.replace(train_config(cfg), n_microbatches=n_mb)
+        model = Model(cfg)
+        state = abstract_state_sharded(model, tcfg)
+        pshard = jax.tree.map(
+            lambda s: getattr(s, "sharding", None), state["params"])
+        step = make_train_step(model, tcfg, param_shardings=pshard)
+        batch = batch_specs(cfg, shape)
+        compiled = jax.jit(step, donate_argnums=(0,)).lower(
+            state, batch).compile()
+        mem = _memory_analysis_dict(compiled)
+    out["mem_args_gib"] = mem.get("argument_size_in_bytes", 0) / 2**30
+    out["mem_temp_gib"] = mem.get("temp_size_in_bytes", 0) / 2**30
+    out["variant"] = f"n_microbatches={n_mb}"
+    return out
+
+
+# ------------------------------------------------------------ experiment B
+def exp_b(wide_cache: bool, mesh) -> dict:
+    """gemma3-12b long_500k: kv_seq over ('model',) vs ('data', 'model')."""
+    cfg = get_config("gemma3-12b")
+    shape = SHAPES["long_500k"]
+    rules = {"kv_seq": ("data", "model")} if wide_cache else None
+    pts = []
+    for lbl, rcfg in analysis_points(cfg):
+        with use_ctx(mesh, rules=rules, unroll=True):
+            fn, args, kw = build_lowerable(rcfg, "long_500k", "true")
+            rec = _analyse(fn, args, kw)
+            rec["n_layers"] = rcfg.n_layers
+            pts.append(rec)
+    full = _extrapolate(pts, cfg)
+    out = _terms(full)
+    # memory term: per-device weights + cache (args of the full-depth true
+    # program would be ideal; reduced-depth args scale with depth, so use
+    # the L-extrapolated figure from the compiled args)
+    a1 = pts[0]["memory"]["argument_size_in_bytes"]
+    a2 = pts[1]["memory"]["argument_size_in_bytes"]
+    per = (a2 - a1) / (pts[1]["n_layers"] - pts[0]["n_layers"])
+    args_full = a1 + per * (cfg.n_layers - pts[0]["n_layers"])
+    out["mem_args_gib"] = args_full / 2**30
+    out["memory_s"] = args_full / HBM_BW
+    out["variant"] = "kv_seq=(data,model)" if wide_cache else "baseline"
+    return out
+
+
+# ------------------------------------------------------------ experiment C
+def exp_c() -> dict:
+    """Scheduler wall-clock: faithful reference vs vectorized/memoized."""
+    import numpy as np
+
+    from repro.core import herad, herad_reference, make_chain, twocatac
+
+    out = {}
+    # reference DP is O(n^2 b l (b+l)) in pure Python — keep its instances
+    # modest and let the vectorized version also run the larger ones.
+    for n, b, l, run_ref in [(20, 16, 4, True), (20, 10, 10, True),
+                             (40, 10, 10, True), (60, 20, 20, False)]:
+        chains = [make_chain(np.random.default_rng(i), n, 0.5)
+                  for i in range(2)]
+        ref_ms = None
+        if run_ref:
+            t0 = time.perf_counter()
+            for ch in chains:
+                herad_reference(ch, b, l)
+            ref_ms = (time.perf_counter() - t0) / len(chains) * 1e3
+        t0 = time.perf_counter()
+        for ch in chains:
+            herad(ch, b, l)
+        vec_ms = (time.perf_counter() - t0) / len(chains) * 1e3
+        t0 = time.perf_counter()
+        for ch in chains:
+            twocatac(ch, b, l, memoize=False)
+        tc_ms = (time.perf_counter() - t0) / len(chains) * 1e3
+        t0 = time.perf_counter()
+        for ch in chains:
+            twocatac(ch, b, l, memoize=True)
+        tcm_ms = (time.perf_counter() - t0) / len(chains) * 1e3
+        out[f"n{n}_b{b}_l{l}"] = {
+            "herad_ref_ms": round(ref_ms, 1) if ref_ms else None,
+            "herad_vec_ms": round(vec_ms, 1),
+            "herad_speedup": round(ref_ms / vec_ms, 1) if ref_ms else None,
+            "2catac_ms": round(tc_ms, 2), "2catac_memo_ms": round(tcm_ms, 2),
+        }
+    return out
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "ABC"
+    if "C" in which:
+        res = exp_c()
+        (OUT / "exp_c_scheduler.json").write_text(json.dumps(res, indent=1))
+        print("C (scheduler):", json.dumps(res, indent=1))
+    mesh = mesh_lib.make_production_mesh()
+    if "A" in which:
+        res = {}
+        for n_mb in (8, 1):
+            res[f"n_mb={n_mb}"] = exp_a(n_mb, mesh)
+            print(f"A n_mb={n_mb}:", json.dumps(res[f"n_mb={n_mb}"]),
+                  flush=True)
+        (OUT / "exp_a_kimi_train.json").write_text(json.dumps(res, indent=1))
+    if "B" in which:
+        base = exp_b(False, mesh)
+        print("B baseline:", json.dumps(base), flush=True)
+        opt = exp_b(True, mesh)
+        print("B wide-cache:", json.dumps(opt), flush=True)
+        (OUT / "exp_b_gemma_long.json").write_text(
+            json.dumps({"baseline": base, "optimized": opt}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

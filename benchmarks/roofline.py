@@ -1,0 +1,240 @@
+"""Roofline analysis from the dry-run artifacts (assignment §Roofline).
+
+Per (arch x shape x mesh) cell, reconstruct full-depth per-device costs from
+the shallow unrolled analysis points (exactly linear in layer count — see
+repro.launch.dryrun.analysis_points) and derive the three roofline terms on
+TPU v5e constants:
+
+  compute_term    = HLO_FLOPs/device            / 197e12 FLOP/s
+  memory_term     = analytic HBM traffic/device / 819e9  B/s
+                    (see _analytic_memory_bytes; the raw HLO bytes-accessed
+                    figure is reported separately as memory_hlo_s — on the
+                    CPU backend it counts unfused op boundaries and
+                    overstates TPU HBM traffic several-fold)
+  collective_term = collective_bytes/device     / 50e9   B/s (ICI link)
+
+plus MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (inference)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Train cells: total = 8 x grad-variant + optimizer-variant (the step has 8
+microbatches). Decode/prefill cells: the unrolled variant is exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.models.config import SHAPES, get_config  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "dryrun_out"
+
+_COLL_KEYS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _fields(rec: dict) -> dict:
+    """Extract the extrapolatable numeric fields from one analysis point."""
+    out = {"flops": rec["cost"].get("flops", 0.0),
+           "bytes": rec["cost"].get("bytes accessed", 0.0)}
+    for k in _COLL_KEYS:
+        out[f"coll:{k}"] = float(rec["collectives"].get(k, 0))
+    out["coll_total"] = sum(out[f"coll:{k}"] for k in _COLL_KEYS)
+    return out
+
+
+def _extrapolate(pts: list[dict], cfg) -> dict:
+    """Reconstruct full-depth costs from shallow points (linear in depth)."""
+    by_layers = {p["n_layers"]: _fields(p) for p in pts}
+    Ls = sorted(by_layers)
+    if cfg.window > 0 or (cfg.kind == "hybrid" and cfg.shared_attn_every):
+        per = cfg.global_every if cfg.window > 0 else cfg.shared_attn_every
+        tail = cfg.n_layers % per
+        n_super = cfg.n_layers // per
+        c1, c2 = by_layers[per], by_layers[2 * per]
+        out = {}
+        for k in c1:
+            sup = c2[k] - c1[k]
+            fixed = c1[k] - sup
+            t = (by_layers[per + tail][k] - c1[k]) if tail else 0.0
+            out[k] = max(fixed + n_super * sup + t, 0.0)
+        return out
+    l1, l2 = Ls[0], Ls[1]
+    c1, c2 = by_layers[l1], by_layers[l2]
+    out = {}
+    for k in c1:
+        per_layer = (c2[k] - c1[k]) / (l2 - l1)
+        fixed = c1[k] - l1 * per_layer
+        out[k] = max(fixed + cfg.n_layers * per_layer, 0.0)
+    return out
+
+
+def _model_flops_per_device(cfg, shape, devices: int) -> float:
+    _, n_active = cfg.param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def _analytic_memory_bytes(cfg, shape, rec) -> float:
+    """Required HBM traffic per device per step (fused-execution model).
+
+    The XLA 'bytes accessed' statistic counts every HLO op boundary in the
+    *CPU* module — without TPU fusion it overstates HBM traffic several-fold
+    (it is reported as a diagnostic). This analytic model counts the traffic
+    a well-fused TPU execution cannot avoid:
+
+      train  : persistent state read+write (params/grad-accum/moments — the
+               optimizer sweep), plus per-microbatch weight reads (gathered
+               FSDP copies land in HBM) for fwd + remat + bwd, plus the
+               residual-stream activation flow;
+      prefill: weight reads + activation flow + KV cache writes;
+      decode : weight reads (every step touches every live parameter shard)
+               + KV/SSM cache read — the classic decode memory bound.
+    """
+    devices = rec["devices"]
+    args = rec["true"]["memory"].get("argument_size_in_bytes", 0)
+    total_params, active_params = cfg.param_count()
+    p_bytes = 2.0  # bf16
+    mode = shape.mode
+    # per-device model-parallel shard of the weights (model axis = 16)
+    w_local = total_params * p_bytes / 16.0
+    if cfg.kind == "moe":
+        # non-expert weights replicated-ish; experts dominate — use the full
+        # sharded figure from the compiled args when available
+        w_local = min(w_local, max(args, 1.0))
+    tokens_local = shape.global_batch * shape.seq_len / devices
+    act_flow = tokens_local * cfg.d_model * 2 * 12 * cfg.n_layers  # r/w x ops
+    if mode == "train":
+        n_mb = rec.get("n_microbatches", 8)
+        state_sweep = 2.0 * args                      # read + write the state
+        weight_reads = 3.0 * w_local * n_mb           # fwd + remat + bwd
+        return state_sweep + weight_reads + 3 * act_flow
+    if mode == "prefill":
+        kv_write = tokens_local * cfg.n_kv_heads * cfg.hd * 2 * 2 \
+            * cfg.n_layers
+        return w_local + act_flow + kv_write
+    # decode
+    cache_read = args - min(w_local, args) if args > w_local else 0.0
+    return min(w_local, args) + max(cache_read, 0.0) + act_flow / 100.0
+
+
+def analyse_cell(path: Path) -> dict | None:
+    rec = json.loads(path.read_text())
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mode = shape.mode
+    if mode == "train":
+        if "grad_pts" not in rec or "opt_pts" not in rec:
+            return None
+        grad = _extrapolate(rec["grad_pts"], cfg)
+        opt = _extrapolate(rec["opt_pts"], cfg)
+        total = {k: rec["n_microbatches"] * grad[k] + opt[k] for k in grad}
+    else:
+        if "unrolled_pts" not in rec:
+            return None
+        total = _extrapolate(rec["unrolled_pts"], cfg)
+
+    devices = rec["devices"]
+    compute_t = total["flops"] / PEAK_FLOPS_BF16
+    mem_bytes = _analytic_memory_bytes(cfg, shape, rec)
+    memory_t = mem_bytes / HBM_BW
+    memory_hlo_t = total["bytes"] / HBM_BW  # diagnostic upper bound
+    coll_t = total["coll_total"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = _model_flops_per_device(cfg, shape, devices)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "devices": devices,
+        "flops_per_dev": total["flops"],
+        "bytes_per_dev": mem_bytes,
+        "bytes_hlo_per_dev": total["bytes"],
+        "coll_bytes_per_dev": total["coll_total"],
+        "coll_breakdown": {k.split(":", 1)[1]: total[k]
+                           for k in total if k.startswith("coll:")},
+        "compute_s": compute_t, "memory_s": memory_t,
+        "memory_hlo_s": memory_hlo_t, "collective_s": coll_t,
+        "dominant": dominant,
+        "step_s_bound": bound,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / total["flops"] if total["flops"] else 0.0,
+        "roofline_fraction": (compute_t / bound) if bound else 0.0,
+        "mem_args_gib": rec["true"]["memory"].get(
+            "argument_size_in_bytes", 0) / 2**30,
+        "mem_temp_gib": rec["true"]["memory"].get(
+            "temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def all_cells() -> list[dict]:
+    out = []
+    for path in sorted(OUT_DIR.glob("*.json")):
+        try:
+            r = analyse_cell(path)
+        except Exception as e:  # noqa: BLE001
+            r = None
+            print(f"# roofline: failed {path.name}: {e}", file=sys.stderr)
+        if r:
+            out.append(r)
+    return out
+
+
+def print_roofline() -> None:
+    print("# roofline: three-term analysis per cell (seconds per step, "
+          "per device; v5e constants)")
+    print("roofline,arch,shape,mesh,compute_s,memory_s,collective_s,"
+          "memory_hlo_s,dominant,useful_ratio,roofline_fraction,"
+          "args_gib,temp_gib")
+    for r in all_cells():
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['memory_hlo_s']:.4g},"
+              f"{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+              f"{r['mem_args_gib']:.2f},{r['mem_temp_gib']:.2f}")
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    rows = [r for r in all_cells() if r["mesh"] == mesh]
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO | roofline frac | args GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['mem_args_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print_roofline()
+
+
+def write_markdown() -> None:
+    """Generate ROOFLINE.md with tables for both meshes."""
+    out = ["# Roofline tables (generated by benchmarks/roofline.py)", ""]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        out.append(f"## mesh {mesh}")
+        out.append("")
+        out.append(markdown_table(mesh))
+        out.append("")
+    Path(__file__).resolve().parents[1].joinpath("ROOFLINE.md").write_text(
+        "\n".join(out))
+    print("wrote ROOFLINE.md")

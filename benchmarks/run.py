@@ -1,0 +1,144 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  table1   : synthetic-chain simulation statistics (paper Table I):
+             % optimal periods, avg/median/max slowdown vs HeRAD, core usage
+             per strategy for SR x R grid.
+  table2   : DVB-S2 schedules on both platforms (paper Table II): period,
+             throughput, pipeline decomposition per strategy.
+  fig3_fig4: strategy wall-clock times vs chain length and resources
+             (paper Figs. 3-4).
+  roofline : three-term roofline per (arch x shape x mesh) from the dry-run
+             artifacts (assignment §Roofline) — see benchmarks/roofline.py.
+
+Prints ``name,...,us_per_call/derived`` CSV rows per the harness contract.
+Use --full for the paper-scale 1000-chain simulation.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np  # noqa: E402
+
+from repro.configs.dvbs2 import (  # noqa: E402
+    RESOURCES,
+    dvbs2_chain,
+    throughput_mbps,
+)
+from repro.core import (  # noqa: E402
+    BIG,
+    LITTLE,
+    fertac,
+    herad,
+    make_chain,
+    otac,
+    twocatac,
+)
+
+STRATS = {
+    "herad": lambda ch, b, l: herad(ch, b, l),
+    "2catac": lambda ch, b, l: twocatac(ch, b, l),
+    "fertac": lambda ch, b, l: fertac(ch, b, l),
+    "otac_b": lambda ch, b, l: otac(ch, b, BIG),
+    "otac_l": lambda ch, b, l: otac(ch, l, LITTLE),
+}
+
+
+def table1(n_chains: int = 200, n_tasks: int = 20) -> None:
+    """Paper Table I: slowdown + core-usage statistics."""
+    print("# table1: simulation statistics "
+          f"({n_chains} chains x {n_tasks} tasks)")
+    print("table1,R,SR,strategy,pct_optimal,avg_slowdown,med_slowdown,"
+          "max_slowdown,avg_big,avg_little")
+    for (b, l) in [(16, 4), (10, 10), (4, 16)]:
+        for sr in (0.2, 0.5, 0.8):
+            results = {k: [] for k in STRATS}
+            usage = {k: [] for k in STRATS}
+            for i in range(n_chains):
+                rng = np.random.default_rng(1000 * b + 100 * i + int(sr * 10))
+                ch = make_chain(rng, n_tasks, sr)
+                popt = herad(ch, b, l).period(ch)
+                for name, fn in STRATS.items():
+                    sol = fn(ch, b, l)
+                    p = sol.period(ch) if not sol.is_empty() else float("inf")
+                    results[name].append(p / popt)
+                    usage[name].append(sol.core_usage())
+            for name in STRATS:
+                r = results[name]
+                ub = statistics.mean(u[0] for u in usage[name])
+                ul = statistics.mean(u[1] for u in usage[name])
+                print(f"table1,({b}B;{l}L),{sr},{name},"
+                      f"{100 * sum(x < 1 + 1e-9 for x in r) / len(r):.1f},"
+                      f"{statistics.mean(r):.3f},{statistics.median(r):.3f},"
+                      f"{max(r):.3f},{ub:.2f},{ul:.2f}")
+
+
+def table2() -> None:
+    """Paper Table II: DVB-S2 schedules."""
+    print("# table2: DVB-S2 receiver schedules")
+    print("table2,platform,R,strategy,period_us,mbps,stages,big_used,"
+          "little_used,decomposition")
+    for platform in ("mac", "x7"):
+        ch = dvbs2_chain(platform)
+        for label, (b, l) in RESOURCES[platform].items():
+            for name, fn in STRATS.items():
+                sol = fn(ch, b, l)
+                p = sol.period(ch)
+                decomp = "|".join(
+                    f"({s.n_tasks()};{s.cores}{s.ctype})" for s in sol.stages)
+                print(f"table2,{platform},({b}B;{l}L),{name},{p:.1f},"
+                      f"{throughput_mbps(p, platform):.1f},"
+                      f"{len(sol.stages)},{sol.cores_used(BIG)},"
+                      f"{sol.cores_used(LITTLE)},{decomp}")
+
+
+def fig3_fig4(n_chains: int = 10) -> None:
+    """Paper Figs. 3-4: strategy execution times (µs)."""
+    print("# fig3_fig4: strategy wall-clock times")
+    print("fig34,n_tasks,R,SR,strategy,us_per_call")
+    for (b, l) in [(20, 20), (40, 40)]:
+        for n in (20, 40, 60):
+            for sr in (0.2, 0.5, 0.8):
+                chains = [make_chain(np.random.default_rng(i), n, sr)
+                          for i in range(n_chains)]
+                for name, fn in STRATS.items():
+                    if name == "2catac" and n > 40 and sr < 0.6:
+                        continue  # exponential regime (paper Fig. 3)
+                    t0 = time.perf_counter()
+                    for ch in chains:
+                        fn(ch, b, l)
+                    us = (time.perf_counter() - t0) / n_chains * 1e6
+                    print(f"fig34,{n},({b}B;{l}L),{sr},{name},{us:.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale simulation (1000 chains)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "table1", "table2", "fig34", "roofline"])
+    args = ap.parse_args()
+    n = 1000 if args.full else 200
+    if args.only in (None, "table2"):
+        table2()
+    if args.only in (None, "table1"):
+        table1(n_chains=n)
+    if args.only in (None, "fig34"):
+        fig3_fig4()
+    if args.only in (None, "roofline"):
+        try:
+            from benchmarks.roofline import print_roofline
+            print_roofline()
+        except Exception as e:  # noqa: BLE001
+            print(f"# roofline: dry-run artifacts unavailable ({e})")
+
+
+if __name__ == "__main__":
+    main()

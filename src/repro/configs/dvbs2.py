@@ -1,0 +1,89 @@
+"""The paper's real-world workload: the DVB-S2 receiver task chain.
+
+Average task latencies (µs) from Table III for both evaluated platforms:
+  - Mac Studio (Apple M1 Ultra, 16 P-cores "big" @3.2 GHz, 4 E-cores "little"
+    @2 GHz), interframe level 4;
+  - X7 Ti (Intel Ultra 9 185H, 6 P-cores "big", 8 E-cores "little"),
+    interframe level 8.
+
+Replicability per Table III's "Rep." column. Used to reproduce Table II's
+schedules/periods exactly, and as the canonical example chain.
+"""
+from __future__ import annotations
+
+from repro.core.chain import TaskChain, chain_from_rows
+
+# (name, replicable, w_big_mac, w_little_mac, w_big_x7, w_little_x7)
+_TASKS = [
+    ("Radio.receive",            False,   52.3,  248.3,  131.7,  133.2),
+    ("MultAGC1.imultiply",       False,   75.2,  149.9,  138.3,  318.1),
+    ("SyncFreqCoarse.sync",      False,   96.4,  496.6,  113.7,  429.0),
+    ("FilterMatched.filter1",    False,  318.9,  902.9,  334.8,  711.9),
+    ("FilterMatched.filter2",    False,  315.1,  883.2,  329.3,  712.6),
+    ("SyncTiming.sync",          False,  950.6, 1468.9, 1341.9, 2387.1),
+    ("SyncTiming.extract",       False,   55.5,  106.0,   58.7,  135.1),
+    ("MultAGC2.imultiply",       False,   37.1,   75.4,   63.5,  157.4),
+    ("SyncFrame.sync1",          False,  361.0, 1064.7,  365.9,  848.1),
+    ("SyncFrame.sync2",          False,   52.9,  169.1,   81.1,  197.9),
+    ("ScramblerSym.descramble",  True,    16.0,   61.0,   25.1,   65.9),
+    ("SyncFreqFineLR.sync",      False,   50.5,  247.1,   54.3,  203.2),
+    ("SyncFreqFinePF.sync",      True,    99.2,  597.8,  253.8,  356.2),
+    ("FramerPLH.remove",         True,    23.4,   65.1,   47.4,   87.7),
+    ("NoiseEst.estimate",        True,    40.5,   65.4,   32.4,   65.4),
+    ("ModemQPSK.demodulate",     True,  2257.5, 4838.6, 2123.1, 5742.4),
+    ("Interleaver.deinterleave", True,    21.1,   58.4,   29.3,   47.6),
+    ("DecoderLDPC.decodeSIHO",   True,   153.2,  506.7,  239.7, 1024.4),
+    ("DecoderBCH.decodeHIHO",    True,  3339.9, 7303.5, 6209.0, 8166.2),
+    ("ScramblerBin.descramble",  True,   191.7,  464.9,  559.0,  621.8),
+    ("SinkBinFile.send",         False,    9.5,   33.3,   34.6,   75.6),
+    ("Source.generate",          False,    4.0,   13.6,   16.9,   23.4),
+    ("Monitor.check",            True,     9.5,   21.0,    9.2,   20.5),
+]
+
+# Table III totals, used as data-integrity checks in the test-suite.
+TOTALS = {
+    ("mac", "B"): 8530.8,
+    ("mac", "L"): 19841.3,
+    ("x7", "B"): 12592.5,
+    ("x7", "L"): 22530.7,
+}
+
+# Platform resources evaluated in Table II: full machine and half machine.
+RESOURCES = {
+    "mac": {"full": (16, 4), "half": (8, 2)},
+    "x7": {"full": (6, 8), "half": (3, 4)},
+}
+
+# Expected periods (µs) from Table II per (platform, resources, strategy).
+TABLE2_PERIODS = {
+    ("mac", (8, 2)): {"herad": 1128.7, "twocatac": 1154.3, "fertac": 1265.6,
+                      "otac_b": 1442.9, "otac_l": 11440.0},
+    ("mac", (16, 4)): {"herad": 950.6, "twocatac": 950.6, "fertac": 950.6,
+                       "otac_b": 950.6, "otac_l": 6470.9},
+    ("x7", (3, 4)): {"herad": 2722.1, "twocatac": 2722.1, "fertac": 2867.0,
+                     "otac_b": 6209.0, "otac_l": 7490.3},
+    ("x7", (6, 8)): {"herad": 1341.9, "twocatac": 1341.9, "fertac": 1552.3,
+                     "otac_b": 2867.0, "otac_l": 3745.1},
+}
+
+# DVB-S2 frame: K = 14232 info bits per frame at rate 8/9 (MODCOD 2); the
+# paper reports information throughput = K * interframe / period.
+K_INFO_BITS = 14232.0
+INTERFRAME = {"mac": 4, "x7": 8}
+
+
+def dvbs2_chain(platform: str = "mac") -> TaskChain:
+    """The 23-task DVB-S2 receiver chain for 'mac' or 'x7'."""
+    if platform == "mac":
+        rows = [(n, r, wb, wl) for (n, r, wb, wl, _, _) in _TASKS]
+    elif platform == "x7":
+        rows = [(n, r, wb, wl) for (n, r, _, _, wb, wl) in _TASKS]
+    else:
+        raise ValueError(f"unknown platform {platform!r}")
+    return chain_from_rows(rows)
+
+
+def throughput_mbps(period_us: float, platform: str) -> float:
+    """Information throughput in Mb/s for a given period (µs)."""
+    frames_per_s = 1e6 / period_us * INTERFRAME[platform]
+    return frames_per_s * K_INFO_BITS / 1e6

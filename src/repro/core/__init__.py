@@ -1,0 +1,35 @@
+# The paper's primary contribution: energy-aware scheduling of
+# partially-replicable task chains on two types of resources
+# (FERTAC / 2CATAC greedy heuristics + HeRAD optimal DP).
+from .chain import (  # noqa: F401
+    BIG,
+    LITTLE,
+    EMPTY_SOLUTION,
+    Solution,
+    Stage,
+    TaskChain,
+    chain_from_rows,
+    make_chain,
+    max_packing,
+    required_cores,
+)
+from .greedy import (  # noqa: F401
+    compute_stage,
+    choose_best_solution,
+    fertac,
+    otac,
+    schedule,
+    twocatac,
+)
+from .herad import herad, herad_reference  # noqa: F401
+from .brute import brute_force  # noqa: F401
+
+STRATEGIES = {
+    "herad": lambda c, b, l: herad(c, b, l),
+    "herad_ref": lambda c, b, l: herad_reference(c, b, l),
+    "fertac": lambda c, b, l: fertac(c, b, l),
+    "twocatac": lambda c, b, l: twocatac(c, b, l),
+    "twocatac_memo": lambda c, b, l: twocatac(c, b, l, memoize=True),
+    "otac_b": lambda c, b, l: otac(c, b, BIG),
+    "otac_l": lambda c, b, l: otac(c, l, LITTLE),
+}

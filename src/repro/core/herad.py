@@ -1,0 +1,311 @@
+"""HeRAD: Heterogeneous Resource Allocation using Dynamic programming.
+
+Optimal solution (period + little-core preference) per Section V of the paper,
+implementing Eq. (4) through Algorithms 7-11:
+
+    P*(j, b, l) = min over stage starts i and core counts u of
+                  max(P*(i-1, b-u, l), w([τ_i, τ_j], u, B))   (big cores)
+                  max(P*(i-1, b, l-u), w([τ_i, τ_j], u, L))   (little cores)
+
+Two result-equivalent implementations are provided:
+
+- ``herad_reference``: scalar loops following the pseudo-code line by line
+  (Algo. 7 driver, Algo. 8 SingleStageSolution, Algo. 9 RecomputeCell,
+  Algo. 10 CompareCells, Algo. 11 ExtractSolution).
+- ``herad``: numpy-vectorized over the (big, little) budget plane.
+
+Vectorization note (beyond-paper, see EXPERIMENTS.md §Perf-algorithms): the
+CompareCells rule of Algo. 10 — "N on strictly smaller period; on ties, N if it
+exchanges big for little or uses fewer-or-equal of both" — is exactly the
+lexicographic order on (period, big-cores-used, little-cores-used):
+
+  * if the periods differ, the smaller wins;
+  * else if the big usages differ, the smaller-big side wins: when n_b < c_b,
+    either c_l < n_l (N trades a big core for little ones → rule 2 → N) or
+    c_l >= n_l (N dominates → rule 3 → N); symmetrically C is kept when
+    c_b < n_b;
+  * else the smaller little usage wins (rule 3 / keep C).
+
+A lexicographic min is total and associative, so (a) the per-cell candidate
+scan vectorizes as elementwise selects over the budget plane, and (b) the
+neighbour propagation of Algo. 9 lines 2-3 is a 2D running-min (cummin along
+each budget axis). Periods are compared exactly; all implementations derive
+stage weights from the same prefix sums (repro.core.chain), so float equality
+is deterministic.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .chain import BIG, LITTLE, EMPTY_SOLUTION, Solution, Stage, TaskChain
+
+_V_LITTLE = 0  # matches the paper's init S_v <- L
+_V_BIG = 1
+
+
+class _Matrix:
+    """Solution matrix S: parallel field arrays over (task, big, little)."""
+
+    def __init__(self, n: int, b: int, l: int):
+        shape = (n, b + 1, l + 1)
+        self.P = np.full(shape, math.inf, dtype=np.float64)
+        self.accb = np.zeros(shape, dtype=np.int64)
+        self.accl = np.zeros(shape, dtype=np.int64)
+        self.prevb = np.zeros(shape, dtype=np.int64)
+        self.prevl = np.zeros(shape, dtype=np.int64)
+        self.v = np.full(shape, _V_LITTLE, dtype=np.int8)
+        self.start = np.zeros(shape, dtype=np.int64)
+
+    def cell(self, j: int, rb: int, rl: int):
+        idx = (j, rb, rl)
+        return (
+            self.P[idx], self.accb[idx], self.accl[idx],
+            self.prevb[idx], self.prevl[idx], self.v[idx], self.start[idx],
+        )
+
+    def set_cell(self, j: int, rb: int, rl: int, cell) -> None:
+        idx = (j, rb, rl)
+        (self.P[idx], self.accb[idx], self.accl[idx],
+         self.prevb[idx], self.prevl[idx], self.v[idx], self.start[idx]) = cell
+
+
+def _compare_cells(c, n):
+    """CompareCells (Algo. 10): lexicographic (period, big used, little used).
+
+    Returns the winning cell; on a full key tie the new cell N is returned
+    (paper rule 3 with all-equal usage).
+    """
+    cP, cab, cal = c[0], c[1], c[2]
+    nP, nab, nal = n[0], n[1], n[2]
+    if (nP < cP
+            or (nP == cP and (nab < cab or (nab == cab and nal <= cal)))):
+        return n
+    return c
+
+
+# ------------------------------------------------------------------ Algo. 8
+def _single_stage_solution(t: int, S: _Matrix, chain: TaskChain,
+                           b: int, l: int) -> None:
+    """All tasks [0, t] in one stage, for every core budget."""
+    rep = chain.is_rep(0, t)
+    sum_l = chain.stage_sum(0, t, LITTLE)
+    sum_b = chain.stage_sum(0, t, BIG)
+    for rl in range(1, l + 1):
+        wl = sum_l / rl if rep else sum_l
+        S.set_cell(t, 0, rl, (wl, 0, rl if rep else 1, 0, 0, _V_LITTLE, 0))
+    for rb in range(1, b + 1):
+        wb = sum_b / rb if rep else sum_b
+        ub = rb if rep else 1
+        for rl in range(0, l + 1):
+            if wb < S.P[t, 0, rl]:  # strict <: ties favour little cores
+                S.set_cell(t, rb, rl, (wb, ub, 0, 0, 0, _V_BIG, 0))
+            else:
+                S.set_cell(t, rb, rl, S.cell(t, 0, rl))
+
+
+# ------------------------------------------------------------------ Algo. 9
+def _recompute_cell(j: int, S: _Matrix, chain: TaskChain, b: int, l: int
+                    ) -> None:
+    """Best P*(j, b, l) over stage starts, core counts and both types."""
+    c = S.cell(j, b, l)  # initial value from SingleStageSolution
+    if l > 0:
+        c = _compare_cells(c, S.cell(j, b, l - 1))
+    if b > 0:
+        c = _compare_cells(c, S.cell(j, b - 1, l))
+    for i in range(j, 0, -1):  # stage [i, j]; prefix [0, i-1]
+        rep = chain.is_rep(i, j)
+        wsum_b = chain.stage_sum(i, j, BIG)
+        wsum_l = chain.stage_sum(i, j, LITTLE)
+        # Paper's optimization: a sequential stage gains nothing from extra
+        # cores — restrict u to 1.
+        for u in range(1, (b if rep else min(1, b)) + 1):
+            pP = S.P[i - 1, b - u, l]
+            w = wsum_b / u if rep else wsum_b
+            nP = pP if pP > w else w
+            ab = S.accb[i - 1, b - u, l] + (u if rep else 1)
+            al = S.accl[i - 1, b - u, l]
+            c = _compare_cells(c, (nP, ab, al, b - u, l, _V_BIG, i))
+        for u in range(1, (l if rep else min(1, l)) + 1):
+            pP = S.P[i - 1, b, l - u]
+            w = wsum_l / u if rep else wsum_l
+            nP = pP if pP > w else w
+            ab = S.accb[i - 1, b, l - u]
+            al = S.accl[i - 1, b, l - u] + (u if rep else 1)
+            c = _compare_cells(c, (nP, ab, al, b, l - u, _V_LITTLE, i))
+    S.set_cell(j, b, l, c)
+
+
+# ----------------------------------------------------------------- Algo. 11
+def _extract_solution(S: _Matrix, chain: TaskChain, b: int, l: int) -> Solution:
+    e, rb, rl = chain.n - 1, b, l
+    stages: list[Stage] = []
+    guard = 0
+    while e >= 0:
+        guard += 1
+        if guard > chain.n + 1:
+            return EMPTY_SOLUTION  # malformed matrix (no valid solution)
+        if not math.isfinite(S.P[e, rb, rl]):
+            return EMPTY_SOLUTION
+        s = int(S.start[e, rb, rl])
+        ub = int(S.accb[e, rb, rl])
+        ul = int(S.accl[e, rb, rl])
+        v = BIG if S.v[e, rb, rl] == _V_BIG else LITTLE
+        pb = int(S.prevb[e, rb, rl])
+        pl = int(S.prevl[e, rb, rl])
+        if s > 0:
+            ub -= int(S.accb[s - 1, pb, pl])
+            ul -= int(S.accl[s - 1, pb, pl])
+        r = ub if v == BIG else ul
+        stages.append(Stage(s, e, r, v))
+        e, rb, rl = s - 1, pb, pl
+    return Solution(tuple(reversed(stages)))
+
+
+# ------------------------------------------------------------------ Algo. 7
+def herad_reference(chain: TaskChain, b: int, l: int,
+                    merge: bool = True) -> Solution:
+    """Faithful scalar-loop HeRAD (Algos. 7-11)."""
+    if b + l <= 0 or (b <= 0 and l <= 0):
+        return EMPTY_SOLUTION
+    n = chain.n
+    S = _Matrix(n, b, l)
+    _single_stage_solution(0, S, chain, b, l)
+    for e in range(1, n):
+        _single_stage_solution(e, S, chain, b, l)
+        for ub in range(0, b + 1):
+            for ul in range(0, l + 1):
+                if ub != 0 or ul != 0:
+                    _recompute_cell(e, S, chain, ub, ul)
+    sol = _extract_solution(S, chain, b, l)
+    if merge and not sol.is_empty():
+        sol = sol.merge_replicable(chain)
+    return sol
+
+
+# ------------------------------------------------- vectorized implementation
+def herad(chain: TaskChain, b: int, l: int, merge: bool = True) -> Solution:
+    """Vectorized HeRAD: identical optimum, orders-of-magnitude faster.
+
+    For each prefix j the whole (b+1, l+1) budget plane is updated at once:
+    stage candidates are shifted slices of the prefix plane, the lexicographic
+    CompareCells order is an elementwise select, and the neighbour propagation
+    is a running lexicographic min along each budget axis.
+    """
+    if b + l <= 0:
+        return EMPTY_SOLUTION
+    n = chain.n
+    S = _Matrix(n, b, l)
+    brange = np.arange(b + 1)
+    lrange = np.arange(l + 1)
+
+    def plane(j):
+        return (S.P[j], S.accb[j], S.accl[j], S.prevb[j], S.prevl[j],
+                S.v[j], S.start[j])
+
+    def select(cur, new, mask):
+        return tuple(np.where(mask, nf, cf) for cf, nf in zip(cur, new))
+
+    def lex_better(newP, newab, newal, curP, curab, cural):
+        # CompareCells as an elementwise mask; <= on the last key matches the
+        # paper's "return N" on full ties.
+        return (newP < curP) | (
+            (newP == curP)
+            & ((newab < curab) | ((newab == curab) & (newal <= cural)))
+        )
+
+    def single_stage_plane(t):
+        rep = chain.is_rep(0, t)
+        sum_l = chain.stage_sum(0, t, LITTLE)
+        sum_b = chain.stage_sum(0, t, BIG)
+        P = np.full((b + 1, l + 1), math.inf)
+        ab = np.zeros((b + 1, l + 1), dtype=np.int64)
+        al = np.zeros((b + 1, l + 1), dtype=np.int64)
+        vv = np.full((b + 1, l + 1), _V_LITTLE, dtype=np.int8)
+        if l > 0:
+            wl = sum_l / lrange[1:] if rep else np.full(l, sum_l)
+            P[0, 1:] = wl
+            al[0, 1:] = lrange[1:] if rep else 1
+        if b > 0:
+            wb = (sum_b / brange[1:] if rep else np.full(b, sum_b))[:, None]
+            ub = (brange[1:] if rep else np.ones(b, dtype=np.int64))[:, None]
+            use_big = wb < P[0][None, :]
+            P[1:] = np.where(use_big, wb, P[0][None, :])
+            ab[1:] = np.where(use_big, ub, 0)
+            al[1:] = np.where(use_big, 0, al[0][None, :])
+            vv[1:] = np.where(use_big, _V_BIG, _V_LITTLE)
+        zeros = np.zeros_like(ab)
+        return (P, ab, al, zeros, zeros, vv, zeros)
+
+    def cummin_neighbours(cur):
+        """Algo. 9 lines 2-3 over the whole plane: running lex-min."""
+        P, ab, al = cur[0], cur[1], cur[2]
+        out = cur
+        # along little axis then big axis (associative total order)
+        for axis in (1, 0):
+            P, ab, al = out[0], out[1], out[2]
+            res = list(f.copy() for f in out)
+            size = P.shape[axis]
+            for k in range(1, size):
+                prev = tuple(np.take(f, k - 1, axis=axis) for f in res)
+                here = tuple(np.take(f, k, axis=axis) for f in res)
+                m = lex_better(prev[0], prev[1], prev[2],
+                               here[0], here[1], here[2])
+                merged = tuple(np.where(m, pf, hf) for pf, hf in zip(prev, here))
+                for f, mf in zip(res, merged):
+                    if axis == 1:
+                        f[:, k] = mf
+                    else:
+                        f[k, :] = mf
+            out = tuple(res)
+        return out
+
+    S0 = single_stage_plane(0)
+    for fdst, fsrc in zip(plane(0), S0):
+        fdst[...] = fsrc
+    for j in range(1, n):
+        cur = [f.copy() for f in single_stage_plane(j)]
+        for i in range(j, 0, -1):  # candidate stage [i, j]
+            rep = chain.is_rep(i, j)
+            wsum_b = chain.stage_sum(i, j, BIG)
+            wsum_l = chain.stage_sum(i, j, LITTLE)
+            prevplane = plane(i - 1)
+            for u in range(1, (b if rep else min(1, b)) + 1):
+                w = wsum_b / u if rep else wsum_b
+                # candidate over cells b >= u (prefix at b-u, same l)
+                pP = prevplane[0][: b + 1 - u]
+                nP = np.maximum(pP, w)
+                nab = prevplane[1][: b + 1 - u] + (u if rep else 1)
+                nal = prevplane[2][: b + 1 - u]
+                npb = np.broadcast_to((brange[u:] - u)[:, None], nP.shape)
+                npl = np.broadcast_to(lrange[None, :], nP.shape)
+                sl = slice(u, b + 1)
+                m = lex_better(nP, nab, nal, cur[0][sl], cur[1][sl], cur[2][sl])
+                new = (nP, nab, nal, npb, npl,
+                       np.full(nP.shape, _V_BIG, dtype=np.int8),
+                       np.full(nP.shape, i, dtype=np.int64))
+                for idx in range(7):
+                    cur[idx][sl] = np.where(m, new[idx], cur[idx][sl])
+            for u in range(1, (l if rep else min(1, l)) + 1):
+                w = wsum_l / u if rep else wsum_l
+                pP = prevplane[0][:, : l + 1 - u]
+                nP = np.maximum(pP, w)
+                nab = prevplane[1][:, : l + 1 - u]
+                nal = prevplane[2][:, : l + 1 - u] + (u if rep else 1)
+                npb = np.broadcast_to(brange[:, None], nP.shape)
+                npl = np.broadcast_to((lrange[u:] - u)[None, :], nP.shape)
+                sl = (slice(None), slice(u, l + 1))
+                m = lex_better(nP, nab, nal, cur[0][sl], cur[1][sl], cur[2][sl])
+                new = (nP, nab, nal, npb, npl,
+                       np.full(nP.shape, _V_LITTLE, dtype=np.int8),
+                       np.full(nP.shape, i, dtype=np.int64))
+                for idx in range(7):
+                    cur[idx][sl] = np.where(m, new[idx], cur[idx][sl])
+        cur = cummin_neighbours(tuple(cur))
+        for fdst, fsrc in zip(plane(j), cur):
+            fdst[...] = fsrc
+    sol = _extract_solution(S, chain, b, l)
+    if merge and not sol.is_empty():
+        sol = sol.merge_replicable(chain)
+    return sol

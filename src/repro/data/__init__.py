@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, Prefetcher  # noqa: F401

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the framework's compute hot-spots (the paper itself
+# is a scheduling contribution with no kernel-level component — these cover
+# the model substrate): flash attention (causal/sliding-window/GQA) and the
+# Mamba2 SSD chunked scan. Each package: kernel.py (pl.pallas_call +
+# BlockSpec VMEM tiling), ops.py (jit'd wrapper), ref.py (pure-jnp oracle).
+# Validated in interpret mode on CPU (tests/test_kernels.py); TPU is the
+# compile target.
+from repro.kernels import flash_attention, ssd_scan  # noqa: F401

@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the framework layout (B, S, H, D) and handles transposition,
+GQA head-count checks, and the interpret flag (CPU validation)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
+                    interpret=False):
+    """q (B, Sq, Hq, D); k/v (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_tpu(qt, kt, vt, causal=causal, window=window,
+                            bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan import ops, ref  # noqa: F401
+from repro.kernels.ssd_scan.kernel import ssd_tpu  # noqa: F401

@@ -1,0 +1,13 @@
+"""jit'd public wrapper for the SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_tpu
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, bmat, cmat, *, chunk=128, interpret=False):
+    return ssd_tpu(x, dt, a, bmat, cmat, chunk=chunk, interpret=interpret)

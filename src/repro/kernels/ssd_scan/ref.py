@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD kernel: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref_sequential(x, dt, a, bmat, cmat):
+    """x (B, L, H, P); dt (B, L, H); a (H,); bmat/cmat (B, L, N).
+    Returns (y (B, L, H, P), state (B, H, P, N))."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dt_t * a[None, :])
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, b_t)
+        state = state * da[..., None, None] + upd
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          bmat.transpose(1, 0, 2).astype(jnp.float32),
+          cmat.transpose(1, 0, 2).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

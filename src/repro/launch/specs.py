@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) cell.
+
+``input_specs`` produces the abstract inputs the dry-run lowers against:
+weak-type-correct, sharding-annotated, zero allocation. The same factories
+back the synthetic data pipeline (repro.data) at concrete scale.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.transformer import Model
+from repro.sharding import current_ctx
+
+
+def _sds(shape, dtype, axes):
+    ctx = current_ctx()
+    sh = ctx.sharding(axes, shape)
+    if sh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Abstract train/prefill batch for one step."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((b, s), jnp.int32, ("batch", None)),
+        "labels": _sds((b, s), jnp.int32, ("batch", None)),
+    }
+    if cfg.kind == "vlm":
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype),
+                              ("batch", None, None))
+    if cfg.kind in ("audio", "encdec"):
+        out["frames"] = _sds((b, cfg.enc_len, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype),
+                             ("batch", None, None))
+    return out
+
+
+def cache_specs(model: Model, shape: ShapeSpec) -> Any:
+    """Abstract decode cache (KV / SSM state) sharded per cache_axes."""
+    cache = model.init_cache(shape.global_batch, shape.seq_len, abstract=True)
+    axes = model.cache_axes()
+    ctx = current_ctx()
+
+    def attach(sds, ax):
+        sh = ctx.sharding(ax, sds.shape)
+        if sh is None:
+            return sds
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    return {k: (attach(v, axes[k]) if hasattr(v, "shape") else v)
+            for k, v in cache.items()}
+
+
+def decode_specs(model: Model, shape: ShapeSpec) -> tuple[Any, Any]:
+    """(cache, tokens) abstract inputs for serve_step."""
+    cache = cache_specs(model, shape)
+    tokens = _sds((shape.global_batch,), jnp.int32, ("batch",))
+    return cache, tokens
+
+
+def abstract_params_sharded(model: Model):
+    """Abstract params with NamedShardings from the logical axes rules."""
+    ctx = current_ctx()
+    params = model.abstract_params()
+    axes = model.param_axes()
+
+    def attach(sds, ax):
+        sh = ctx.sharding(ax, sds.shape)
+        if sh is None:
+            return sds
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(i, (str, type(None))) for i in x)
+    return jax.tree.map(attach, params, axes)
+
+
+def abstract_state_sharded(model: Model, tcfg) -> Any:
+    """Abstract train state (params + opt) with shardings."""
+    from repro.train.step import abstract_train_state, train_state_axes
+    ctx = current_ctx()
+    state = abstract_train_state(model, tcfg)
+    axes = train_state_axes(model, tcfg)
+
+    def attach(sds, ax):
+        sh = ctx.sharding(ax, sds.shape)
+        if sh is None:
+            return sds
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(i, (str, type(None))) for i in x)
+    return jax.tree.map(attach, state, axes, is_leaf=_sds_leaf)
+
+
+def _sds_leaf(x):
+    return isinstance(x, jax.ShapeDtypeStruct)

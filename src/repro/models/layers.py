@@ -1,0 +1,78 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU, embeddings, cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import shard
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) tables for the given absolute positions, shape (..., hd/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); sin/cos: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if sin.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        sin_, cos_ = sin[None, :, None, :], cos[None, :, None, :]
+    else:  # (B, S, half)
+        sin_, cos_ = sin[:, :, None, :], cos[:, :, None, :]
+    out = jnp.concatenate(
+        [x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1
+    )
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+           ) -> jax.Array:
+    """SwiGLU MLP with TP-sharded hidden dim."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", None, "ff")
+    return h @ w_down
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    x = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    return shard(x, "batch", None, None)
+
+
+def lm_logits(x: jax.Array, table_or_head: jax.Array, tied: bool) -> jax.Array:
+    """Final projection to vocab (fp32 logits for loss stability)."""
+    w = table_or_head.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    logits = x @ (w.T if tied else w)
+    return shard(logits, "batch", None, "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy; logits (B, S, V) fp32, labels (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def init_dense(rng, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)

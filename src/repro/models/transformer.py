@@ -1,0 +1,768 @@
+"""The model zoo: one generic implementation covering all assigned families.
+
+Families (ModelConfig.kind):
+  dense / vlm      : pre-norm decoder transformer (RoPE, GQA, SwiGLU);
+                     vlm splices precomputed patch embeddings (frontend stub).
+  moe              : dense skeleton with expert-parallel MoE FFN
+                     (+ optional dense residual MLP — arctic).
+  gemma-style      : `window > 0` — superblocks of (global_every-1) local
+                     sliding-window layers + 1 global layer, single outer
+                     scan; rolling window KV caches for local layers.
+  ssm              : Mamba2 (SSD) stack.
+  hybrid           : zamba2 — Mamba2 superblocks + one *shared* attention
+                     block applied every `shared_attn_every` layers.
+  encdec / audio   : whisper — encoder (non-causal) + decoder with
+                     cross-attention; frame embeddings from the frontend stub.
+
+Layer stacks are scanned (`lax.scan`) with per-layer remat, so the lowered
+HLO stays compact for the 512-device dry-runs. All activations follow the
+context-parallel layout (batch over 'data'/'pod', sequence over 'model') in
+train/prefill, and the Megatron/flash-decoding layout in decode — see
+DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import embedloss
+from repro.models.attention import context_attention, decode_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm, rope_table
+from repro.models.moe import moe_apply
+from repro.models.ssm import mamba_block
+from repro.sharding import scan_unroll, shard
+
+Params = Any
+
+
+def _scan(body, init, xs, **kw):
+    """lax.scan that honours the analysis-mode unroll flag (dryrun.py)."""
+    kw.setdefault("unroll", 1)
+    u = scan_unroll()
+    return jax.lax.scan(body, init, xs, unroll=True if u else kw["unroll"])
+
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# =========================================================== initialization
+def _norm_init(rng, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense_init(rng, shape, dtype, in_axis=0):
+    fan_in = shape[in_axis] if in_axis >= 0 else int(np.prod(shape[:-1]))
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+class _Maker:
+    """Collects (leaf init, logical axes) declarations."""
+
+    def __init__(self, rng, dtype):
+        self.rng = rng
+        self.dtype = dtype
+        self.leaves: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def dense(self, name, shape, axes, in_axis=0):
+        self.rng, sub = jax.random.split(self.rng)
+        self.leaves[name] = _dense_init(sub, shape, self.dtype, in_axis)
+        self.axes[name] = axes
+
+    def norm(self, name, shape, axes):
+        self.leaves[name] = jnp.zeros(shape, self.dtype)
+        self.axes[name] = axes
+
+    def const(self, name, value, axes):
+        self.leaves[name] = value.astype(self.dtype) if value.dtype != jnp.int32 \
+            else value
+        self.axes[name] = axes
+
+
+def _attn_leaves(m: _Maker, cfg: ModelConfig, stack: tuple[int, ...],
+                 cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pre = "c" if cross else ""
+    m.norm(pre + "ln_attn", stack + (d,), (None,) * len(stack) + ("embed",))
+    m.dense(pre + "wq", stack + (d, hq * hd),
+            (None,) * len(stack) + ("embed", "q_heads"), in_axis=len(stack))
+    m.dense(pre + "wk", stack + (d, hkv * hd),
+            (None,) * len(stack) + ("embed", "kv_heads"), in_axis=len(stack))
+    m.dense(pre + "wv", stack + (d, hkv * hd),
+            (None,) * len(stack) + ("embed", "kv_heads"), in_axis=len(stack))
+    m.dense(pre + "wo", stack + (hq * hd, d),
+            (None,) * len(stack) + ("q_heads", "embed"), in_axis=len(stack))
+
+
+def _mlp_leaves(m: _Maker, cfg: ModelConfig, stack: tuple[int, ...]):
+    d, f = cfg.d_model, cfg.d_ff
+    m.norm("ln_mlp", stack + (d,), (None,) * len(stack) + ("embed",))
+    m.dense("w_gate", stack + (d, f), (None,) * len(stack) + ("embed", "ff"),
+            in_axis=len(stack))
+    m.dense("w_up", stack + (d, f), (None,) * len(stack) + ("embed", "ff"),
+            in_axis=len(stack))
+    m.dense("w_down", stack + (f, d), (None,) * len(stack) + ("ff", "embed"),
+            in_axis=len(stack))
+
+
+def _moe_leaves(m: _Maker, cfg: ModelConfig, stack: tuple[int, ...]):
+    d = cfg.d_model
+    mo = cfg.moe
+    ns = len(stack)
+    m.norm("ln_mlp", stack + (d,), (None,) * ns + ("embed",))
+    m.dense("router", stack + (d, mo.n_experts),
+            (None,) * ns + ("embed", None), in_axis=ns)
+    m.dense("moe_gate", stack + (mo.n_experts, d, mo.d_ff_expert),
+            (None,) * ns + ("experts", "embed", "expert_ff"), in_axis=ns + 1)
+    m.dense("moe_up", stack + (mo.n_experts, d, mo.d_ff_expert),
+            (None,) * ns + ("experts", "embed", "expert_ff"), in_axis=ns + 1)
+    m.dense("moe_down", stack + (mo.n_experts, mo.d_ff_expert, d),
+            (None,) * ns + ("experts", "expert_ff", "embed"), in_axis=ns + 1)
+    if mo.dense_residual:
+        m.dense("w_gate", stack + (d, cfg.d_ff),
+                (None,) * ns + ("embed", "ff"), in_axis=ns)
+        m.dense("w_up", stack + (d, cfg.d_ff),
+                (None,) * ns + ("embed", "ff"), in_axis=ns)
+        m.dense("w_down", stack + (cfg.d_ff, d),
+                (None,) * ns + ("ff", "embed"), in_axis=ns)
+
+
+def _mamba_leaves(m: _Maker, cfg: ModelConfig, stack: tuple[int, ...],
+                  with_mlp: bool):
+    d = cfg.d_model
+    s = cfg.ssm
+    di, n, h, w = s.d_inner(d), s.d_state, s.n_heads(d), s.conv_width
+    ns = len(stack)
+    m.norm("ln_ssm", stack + (d,), (None,) * ns + ("embed",))
+    m.dense("in_proj", stack + (d, 2 * di + 2 * n + h),
+            (None,) * ns + ("embed", "ff"), in_axis=ns)
+    m.dense("conv_w", stack + (w, di + 2 * n), (None,) * (ns + 2), in_axis=ns)
+    m.rng, sub = jax.random.split(m.rng)
+    m.leaves["dt_bias"] = jnp.broadcast_to(
+        jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, h))), stack + (h,)
+    ).astype(m.dtype)
+    m.axes["dt_bias"] = (None,) * (ns + 1)
+    m.leaves["A_log"] = jnp.broadcast_to(
+        jnp.log(jnp.linspace(1.0, 16.0, h)), stack + (h,)).astype(m.dtype)
+    m.axes["A_log"] = (None,) * (ns + 1)
+    m.leaves["D"] = jnp.ones(stack + (h,), m.dtype)
+    m.axes["D"] = (None,) * (ns + 1)
+    m.norm("ssm_norm", stack + (di,), (None,) * ns + ("ff",))
+    m.dense("out_proj", stack + (di, d), (None,) * ns + ("ff", "embed"),
+            in_axis=ns)
+    if with_mlp:
+        _mlp_leaves(m, cfg, stack)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------ structure
+    @property
+    def n_super(self) -> int:
+        c = self.cfg
+        if c.window > 0:
+            return c.n_layers // c.global_every
+        if c.kind == "hybrid" and c.shared_attn_every:
+            return c.n_layers // c.shared_attn_every
+        return 0
+
+    @property
+    def n_tail(self) -> int:
+        c = self.cfg
+        if c.window > 0:
+            return c.n_layers % c.global_every
+        if c.kind == "hybrid" and c.shared_attn_every:
+            return c.n_layers % c.shared_attn_every
+        return 0
+
+    # ---------------------------------------------------------------- init
+    def init(self, seed: int = 0) -> Params:
+        params, _ = self._build(jax.random.PRNGKey(seed))
+        return params
+
+    def param_axes(self):
+        """Logical-axis names mirroring the param pytree (no allocation)."""
+        closure = {}
+
+        def run():
+            p, a = self._build(jax.random.PRNGKey(0))
+            closure["axes"] = a
+            return p
+
+        jax.eval_shape(run)
+        return closure["axes"]
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self._build(jax.random.PRNGKey(0))[0])
+
+    def _build(self, rng):
+        c = self.cfg
+        dtype = _dt(c.param_dtype)
+        m = _Maker(rng, dtype)
+        m.dense("embed", (c.padded_vocab, c.d_model), ("vocab", "embed"),
+                in_axis=1)
+        m.norm("ln_final", (c.d_model,), ("embed",))
+        top = dict(m.leaves)
+        top_axes = dict(m.axes)
+        L = c.n_layers
+        if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
+            mm = _Maker(m.rng, dtype)
+            _attn_leaves(mm, c, (L,))
+            (_moe_leaves if c.kind == "moe" else _mlp_leaves)(mm, c, (L,))
+            top["layers"], top_axes["layers"] = mm.leaves, mm.axes
+        elif c.window > 0:  # gemma-style pattern
+            ns, nt, per = self.n_super, self.n_tail, c.global_every
+            mm = _Maker(m.rng, dtype)
+            _attn_leaves(mm, c, (ns, per - 1))
+            _mlp_leaves(mm, c, (ns, per - 1))
+            top["local"], top_axes["local"] = mm.leaves, mm.axes
+            mm = _Maker(mm.rng, dtype)
+            _attn_leaves(mm, c, (ns,))
+            _mlp_leaves(mm, c, (ns,))
+            top["global"], top_axes["global"] = mm.leaves, mm.axes
+            if nt:
+                mm = _Maker(mm.rng, dtype)
+                _attn_leaves(mm, c, (nt,))
+                _mlp_leaves(mm, c, (nt,))
+                top["tail"], top_axes["tail"] = mm.leaves, mm.axes
+        elif c.kind == "ssm":
+            mm = _Maker(m.rng, dtype)
+            _mamba_leaves(mm, c, (L,), with_mlp=False)
+            top["layers"], top_axes["layers"] = mm.leaves, mm.axes
+        elif c.kind == "hybrid":
+            ns, nt, per = self.n_super, self.n_tail, c.shared_attn_every
+            mm = _Maker(m.rng, dtype)
+            _mamba_leaves(mm, c, (ns, per), with_mlp=False)
+            top["mamba"], top_axes["mamba"] = mm.leaves, mm.axes
+            if nt:
+                mm = _Maker(mm.rng, dtype)
+                _mamba_leaves(mm, c, (nt,), with_mlp=False)
+                top["tail"], top_axes["tail"] = mm.leaves, mm.axes
+            mm = _Maker(mm.rng, dtype)
+            _attn_leaves(mm, c, ())
+            _mlp_leaves(mm, c, ())
+            top["shared_attn"], top_axes["shared_attn"] = mm.leaves, mm.axes
+        elif c.kind in ("encdec", "audio"):
+            mm = _Maker(m.rng, dtype)
+            _attn_leaves(mm, c, (c.n_enc_layers,))
+            _mlp_leaves(mm, c, (c.n_enc_layers,))
+            top["enc"], top_axes["enc"] = mm.leaves, mm.axes
+            mm = _Maker(mm.rng, dtype)
+            _attn_leaves(mm, c, (L,))
+            _attn_leaves(mm, c, (L,), cross=True)
+            _mlp_leaves(mm, c, (L,))
+            top["dec"], top_axes["dec"] = mm.leaves, mm.axes
+            top["ln_enc_final"] = jnp.zeros((c.d_model,), dtype)
+            top_axes["ln_enc_final"] = ("embed",)
+        else:
+            raise ValueError(f"unknown kind {c.kind}")
+        return top, top_axes
+
+    # ------------------------------------------------------ shared pieces
+    def _attn_train(self, p, x, sin, cos, window, prefix=""):
+        c = self.cfg
+        b, s, d = x.shape
+        h = rms_norm(x, p[prefix + "ln_attn"], c.norm_eps)
+        q = (h @ p[prefix + "wq"]).reshape(b, s, c.n_heads, c.hd)
+        k = (h @ p[prefix + "wk"]).reshape(b, s, c.n_kv_heads, c.hd)
+        v = (h @ p[prefix + "wv"]).reshape(b, s, c.n_kv_heads, c.hd)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        o = context_attention(q, k, v, causal=True, window=window)
+        o = o.reshape(b, s, -1) @ p[prefix + "wo"]
+        return x + shard(o, "batch", "seq", None), (k, v)
+
+    def _attn_nocausal(self, p, x, prefix="", kv_from=None):
+        """Encoder self-attention / decoder cross-attention (no RoPE)."""
+        c = self.cfg
+        b, s, d = x.shape
+        h = rms_norm(x, p[prefix + "ln_attn"], c.norm_eps)
+        src = h if kv_from is None else kv_from
+        q = (h @ p[prefix + "wq"]).reshape(b, s, c.n_heads, c.hd)
+        k = (src @ p[prefix + "wk"]).reshape(b, src.shape[1], c.n_kv_heads, c.hd)
+        v = (src @ p[prefix + "wv"]).reshape(b, src.shape[1], c.n_kv_heads, c.hd)
+        o = context_attention(q, k, v, causal=False, window=0)
+        o = o.reshape(b, s, -1) @ p[prefix + "wo"]
+        return x + shard(o, "batch", "seq", None), (k, v)
+
+    def _ffn(self, p, x):
+        c = self.cfg
+        h = rms_norm(x, p["ln_mlp"], c.norm_eps)
+        if c.kind == "moe" and "router" in p:
+            y = moe_apply(h, {"router": p["router"], "w_gate": p["moe_gate"],
+                              "w_up": p["moe_up"], "w_down": p["moe_down"]},
+                          c.moe)
+            if c.moe.dense_residual:
+                y = y + self._dense_mlp(p, h)
+        else:
+            y = self._dense_mlp(p, h)
+        return x + shard(y, "batch", "seq", None)
+
+    def _dense_mlp(self, p, h):
+        hh = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+        hh = shard(hh, "batch", "seq", "ff")
+        return hh @ p["w_down"]
+
+    def _maybe_remat(self, f):
+        return jax.checkpoint(f) if self.cfg.remat else f
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params: Params, batch: dict,
+                collect: bool = False):
+        """Full-sequence forward -> final hidden states (B, S, D).
+
+        With ``collect=True`` also returns the per-layer cache material
+        (KV stacks / SSM states) harvested from the scan outputs."""
+        c = self.cfg
+        cdt = _dt(c.compute_dtype)
+        if c.kind in ("encdec", "audio"):
+            return self._forward_encdec(params, batch, collect)
+        tokens = batch["tokens"]
+        x = embedloss.embed_in(params["embed"], tokens, cdt)
+        if c.kind == "vlm" and "patches" in batch:
+            patches = batch["patches"].astype(cdt)
+            x = jnp.concatenate([patches, x[:, patches.shape[1]:]], axis=1)
+        x = shard(x, "batch", "seq", None)
+        s = x.shape[1]
+        sin, cos = rope_table(jnp.arange(s), c.hd, c.rope_theta)
+        col: dict[str, Any] = {}
+
+        if c.kind == "ssm":
+            def body(xx, p):
+                h = rms_norm(xx, p["ln_ssm"], c.norm_eps)
+                y, st = mamba_block(p, h, c.ssm)
+                return xx + shard(y, "batch", "seq", None), \
+                    st if collect else None
+            x, ys = _scan(self._maybe_remat(body), x, params["layers"])
+            if collect:
+                col["conv"], col["state"] = ys
+        elif c.kind == "hybrid":
+            x, col = self._forward_hybrid(params, x, sin, cos, collect)
+        elif c.window > 0:
+            x, col = self._forward_windowed(params, x, sin, cos, collect)
+        else:
+            def body(xx, p):
+                xx, kv = self._attn_train(p, xx, sin, cos, window=0)
+                xx = self._ffn(p, xx)
+                return xx, kv if collect else None
+            x, ys = _scan(self._maybe_remat(body), x, params["layers"])
+            if collect:
+                col["k"], col["v"] = ys
+        out = rms_norm(x, params["ln_final"], c.norm_eps)
+        return (out, col) if collect else out
+
+    def _forward_windowed(self, params, x, sin, cos, collect=False):
+        c = self.cfg
+
+        def local_body(xx, p):
+            xx, kv = self._attn_train(p, xx, sin, cos, window=c.window)
+            xx = self._ffn(p, xx)
+            return xx, kv if collect else None
+
+        def super_body(xx, p):
+            xx, kvl = _scan(self._maybe_remat(local_body), xx,
+                                   p["local"])
+            xx, kvg = self._attn_train(p["global"], xx, sin, cos, window=0)
+            xx = self._ffn(p["global"], xx)
+            return xx, (kvl, kvg) if collect else None
+
+        col: dict[str, Any] = {}
+        stacked = {"local": params["local"], "global": params["global"]}
+        x, ys = _scan(self._maybe_remat(super_body), x, stacked)
+        if collect:
+            (col["k_local"], col["v_local"]), (col["k_global"],
+                                               col["v_global"]) = ys
+        if self.n_tail:
+            x, ys = _scan(self._maybe_remat(local_body), x,
+                                 params["tail"])
+            if collect:
+                col["k_tail"], col["v_tail"] = ys
+        return x, col
+
+    def _forward_hybrid(self, params, x, sin, cos, collect=False):
+        c = self.cfg
+
+        def mamba_body(xx, p):
+            h = rms_norm(xx, p["ln_ssm"], c.norm_eps)
+            y, st = mamba_block(p, h, c.ssm)
+            xx = xx + shard(y, "batch", "seq", None)
+            return xx, st if collect else None
+
+        shared = params["shared_attn"]
+
+        def super_body(xx, p):
+            xx, sts = _scan(self._maybe_remat(mamba_body), xx, p)
+            xx, kv = self._attn_train(shared, xx, sin, cos, window=0)
+            xx = self._ffn(shared, xx)
+            return xx, (sts, kv) if collect else None
+
+        col: dict[str, Any] = {}
+        x, ys = _scan(self._maybe_remat(super_body), x, params["mamba"])
+        if collect:
+            (col["conv"], col["state"]), (col["k_shared"],
+                                          col["v_shared"]) = ys
+        if self.n_tail:
+            x, ys = _scan(self._maybe_remat(mamba_body), x,
+                                 params["tail"])
+            if collect:
+                col["conv_tail"], col["state_tail"] = ys
+        return x, col
+
+    def _forward_encdec(self, params, batch, collect=False):
+        c = self.cfg
+        cdt = _dt(c.compute_dtype)
+        frames = batch["frames"].astype(cdt)          # (B, enc_len, D) stub
+        enc_pos = _sinusoid(frames.shape[1], c.d_model).astype(cdt)
+        h = shard(frames + enc_pos[None], "batch", None, None)
+
+        def enc_body(xx, p):
+            xx, _ = self._attn_nocausal(p, xx)
+            xx = self._ffn(p, xx)
+            return xx, None
+
+        h, _ = _scan(self._maybe_remat(enc_body), h, params["enc"])
+        h = rms_norm(h, params["ln_enc_final"], c.norm_eps)
+
+        tokens = batch["tokens"]
+        x = embedloss.embed_in(params["embed"], tokens, cdt)
+        x = shard(x, "batch", "seq", None)
+        s = x.shape[1]
+        sin, cos = rope_table(jnp.arange(s), c.hd, c.rope_theta)
+
+        def dec_body(xx, p):
+            xx, kvs = self._attn_train(p, xx, sin, cos, window=0)
+            xx, kvc = self._attn_nocausal(p, xx, prefix="c", kv_from=h)
+            xx = self._ffn(p, xx)
+            return xx, (kvs, kvc) if collect else None
+
+        x, ys = _scan(self._maybe_remat(dec_body), x, params["dec"])
+        out = rms_norm(x, params["ln_final"], c.norm_eps)
+        if collect:
+            col = {}
+            (col["k_self"], col["v_self"]), (col["k_cross"],
+                                             col["v_cross"]) = ys
+            return out, col
+        return out
+
+    # ---------------------------------------------------------------- loss
+    def loss(self, params: Params, batch: dict) -> jax.Array:
+        x = self.forward(params, batch)
+        return embedloss.lm_loss(x, params["embed"], batch["labels"],
+                                  valid_vocab=self.cfg.vocab)
+
+    # ================================================================ decode
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Encoder-only pass (whisper): frames (B, T, D) -> enc states."""
+        c = self.cfg
+        cdt = _dt(c.compute_dtype)
+        enc_pos = _sinusoid(frames.shape[1], c.d_model).astype(cdt)
+        h = shard(frames.astype(cdt) + enc_pos[None], "batch", None, None)
+
+        def enc_body(xx, p):
+            xx, _ = self._attn_nocausal(p, xx)
+            xx = self._ffn(p, xx)
+            return xx, None
+
+        h, _ = _scan(self._maybe_remat(enc_body), h, params["enc"])
+        return rms_norm(h, params["ln_enc_final"], c.norm_eps)
+
+    def cross_kv(self, params: Params, enc_out: jax.Array):
+        """Per-decoder-layer cross-attention K/V from encoder states."""
+        c = self.cfg
+        b, t, _ = enc_out.shape
+        k = jnp.einsum("btd,lde->lbte", enc_out,
+                       params["dec"]["cwk"]).reshape(
+            c.n_layers, b, t, c.n_kv_heads, c.hd)
+        v = jnp.einsum("btd,lde->lbte", enc_out,
+                       params["dec"]["cwv"]).reshape(
+            c.n_layers, b, t, c.n_kv_heads, c.hd)
+        return k, v
+
+    def init_cache(self, batch_size: int, seq_len: int, abstract: bool = False,
+                   params: Params | None = None, batch: dict | None = None):
+        """Zeroed (or abstract) decode cache for a max context of seq_len.
+
+        For encoder-decoder models, pass ``params`` and a ``batch`` with
+        'frames' to populate the cross-attention K/V from the encoder."""
+        c = self.cfg
+        cdt = _dt(c.compute_dtype)
+        make = (lambda sh, dt=cdt: jax.ShapeDtypeStruct(sh, dt)) if abstract \
+            else (lambda sh, dt=cdt: jnp.zeros(sh, dt))
+        b = batch_size
+        kvshape = lambda n, s: (n, b, s, c.n_kv_heads, c.hd)  # noqa: E731
+        cache: dict[str, Any] = {"pos": make((), jnp.int32)}
+        if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
+            cache["k"] = make(kvshape(c.n_layers, seq_len))
+            cache["v"] = make(kvshape(c.n_layers, seq_len))
+        elif c.window > 0:
+            ns, nt, per = self.n_super, self.n_tail, c.global_every
+            w = min(c.window, seq_len)
+            cache["k_local"] = make((ns, per - 1, b, w, c.n_kv_heads, c.hd))
+            cache["v_local"] = make((ns, per - 1, b, w, c.n_kv_heads, c.hd))
+            cache["k_global"] = make(kvshape(ns, seq_len))
+            cache["v_global"] = make(kvshape(ns, seq_len))
+            if nt:
+                cache["k_tail"] = make(kvshape(nt, w))
+                cache["v_tail"] = make(kvshape(nt, w))
+        elif c.kind == "ssm":
+            s = c.ssm
+            di, n = s.d_inner(c.d_model), s.d_state
+            cache["conv"] = make((c.n_layers, b, s.conv_width - 1, di + 2 * n))
+            cache["state"] = make(
+                (c.n_layers, b, s.n_heads(c.d_model), s.head_dim, n),
+                jnp.float32)
+        elif c.kind == "hybrid":
+            s = c.ssm
+            ns, nt, per = self.n_super, self.n_tail, c.shared_attn_every
+            di, n = s.d_inner(c.d_model), s.d_state
+            cache["conv"] = make((ns, per, b, s.conv_width - 1, di + 2 * n))
+            cache["state"] = make(
+                (ns, per, b, s.n_heads(c.d_model), s.head_dim, n), jnp.float32)
+            if nt:
+                cache["conv_tail"] = make((nt, b, s.conv_width - 1, di + 2 * n))
+                cache["state_tail"] = make(
+                    (nt, b, s.n_heads(c.d_model), s.head_dim, n), jnp.float32)
+            cache["k_shared"] = make(kvshape(ns, seq_len))
+            cache["v_shared"] = make(kvshape(ns, seq_len))
+        elif c.kind in ("encdec", "audio"):
+            cache["k_self"] = make(kvshape(c.n_layers, seq_len))
+            cache["v_self"] = make(kvshape(c.n_layers, seq_len))
+            if params is not None and batch is not None and not abstract:
+                enc_out = self.encode(params, batch["frames"])
+                kc, vc = self.cross_kv(params, enc_out)
+                cache["k_cross"] = kc.astype(cdt)
+                cache["v_cross"] = vc.astype(cdt)
+                return cache
+            cache["k_cross"] = make(kvshape(c.n_layers, c.enc_len))
+            cache["v_cross"] = make(kvshape(c.n_layers, c.enc_len))
+        return cache
+
+    def cache_axes(self):
+        """Logical axes for the cache pytree (kv seq axis sharded)."""
+        c = self.cfg
+        ax: dict[str, Any] = {"pos": ()}
+        kv = (None, "batch", "kv_seq", None, None)
+        if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
+            ax["k"] = kv
+            ax["v"] = kv
+        elif c.window > 0:
+            ax["k_local"] = (None, None, "batch", "kv_seq", None, None)
+            ax["v_local"] = (None, None, "batch", "kv_seq", None, None)
+            ax["k_global"] = kv
+            ax["v_global"] = kv
+            if self.n_tail:
+                ax["k_tail"] = kv
+                ax["v_tail"] = kv
+        elif c.kind == "ssm":
+            ax["conv"] = (None, "batch", None, "ff")
+            ax["state"] = (None, "batch", "q_heads", None, None)
+        elif c.kind == "hybrid":
+            ax["conv"] = (None, None, "batch", None, "ff")
+            ax["state"] = (None, None, "batch", "q_heads", None, None)
+            if self.n_tail:
+                ax["conv_tail"] = (None, "batch", None, "ff")
+                ax["state_tail"] = (None, "batch", "q_heads", None, None)
+            ax["k_shared"] = kv
+            ax["v_shared"] = kv
+        elif c.kind in ("encdec", "audio"):
+            ax["k_self"] = kv
+            ax["v_self"] = kv
+            ax["k_cross"] = kv
+            ax["v_cross"] = kv
+        return ax
+
+    def _attn_decode(self, p, x, cache_kv, pos, *, rolling=False, window=0,
+                     prefix="", cross=False):
+        """x (B, 1, D); cache_kv = (k, v) slices (B, S, Hkv, hd).
+
+        Returns (x', (k_cache', v_cache')). For cross attention the cache is
+        read-only."""
+        c = self.cfg
+        b = x.shape[0]
+        k_cache, v_cache = cache_kv
+        h = rms_norm(x, p[prefix + "ln_attn"], c.norm_eps)
+        q = (h @ p[prefix + "wq"]).reshape(b, 1, c.n_heads, c.hd)
+        if not cross:
+            k = (h @ p[prefix + "wk"]).reshape(b, 1, c.n_kv_heads, c.hd)
+            v = (h @ p[prefix + "wv"]).reshape(b, 1, c.n_kv_heads, c.hd)
+            sin, cos = rope_table(pos[None], c.hd, c.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+            if rolling:
+                slot = pos % k_cache.shape[1]
+            else:
+                slot = jnp.minimum(pos, k_cache.shape[1] - 1)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), slot, axis=1)
+            att_pos = pos
+        else:
+            att_pos = jnp.int32(k_cache.shape[1] - 1)  # attend to all enc kv
+        o = decode_attention(q[:, 0], k_cache, v_cache, pos=att_pos,
+                             window=0 if rolling or cross else window)
+        o = o.reshape(b, 1, -1) @ p[prefix + "wo"]
+        return x + o, (k_cache, v_cache)
+
+    def decode_step(self, params: Params, cache, tokens: jax.Array):
+        """tokens (B,) int32 -> (next_tokens (B,), cache')."""
+        c = self.cfg
+        cdt = _dt(c.compute_dtype)
+        b = tokens.shape[0]
+        pos = cache["pos"]
+        x = embedloss.embed_in(params["embed"], tokens[:, None], cdt)
+        x = shard(x, "batch", None, None)
+        newc = dict(cache)
+
+        if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
+            def body(xx, xs):
+                p, kc, vc = xs
+                xx, (kc, vc) = self._attn_decode(p, xx, (kc, vc), pos)
+                xx = self._ffn(p, xx)
+                return xx, (kc, vc)
+            x, (newc["k"], newc["v"]) = _scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+        elif c.window > 0:
+            x = self._decode_windowed(params, x, cache, newc, pos)
+        elif c.kind == "ssm":
+            def body(xx, xs):
+                p, conv, st = xs
+                h = rms_norm(xx, p["ln_ssm"], c.norm_eps)
+                y, (conv, st) = mamba_block(p, h, c.ssm, conv_cache=conv,
+                                            ssd_state=st)
+                return xx + y, (conv, st)
+            x, (newc["conv"], newc["state"]) = _scan(
+                body, x, (params["layers"], cache["conv"], cache["state"]))
+        elif c.kind == "hybrid":
+            x = self._decode_hybrid(params, x, cache, newc, pos)
+        elif c.kind in ("encdec", "audio"):
+            def body(xx, xs):
+                p, ks, vs, kc, vc = xs
+                xx, (ks, vs) = self._attn_decode(p, xx, (ks, vs), pos)
+                xx, _ = self._attn_decode(p, xx, (kc, vc), pos, prefix="c",
+                                          cross=True)
+                xx = self._ffn(p, xx)
+                return xx, (ks, vs)
+            x, (newc["k_self"], newc["v_self"]) = _scan(
+                body, x, (params["dec"], cache["k_self"], cache["v_self"],
+                          cache["k_cross"], cache["v_cross"]))
+        x = rms_norm(x, params["ln_final"], c.norm_eps)
+        nxt = embedloss.greedy(x[:, 0], params["embed"],
+                                valid_vocab=self.cfg.vocab)
+        newc["pos"] = pos + 1
+        return nxt, newc
+
+    def _decode_windowed(self, params, x, cache, newc, pos):
+        c = self.cfg
+
+        def local_body(xx, xs):
+            p, kc, vc = xs
+            xx, (kc, vc) = self._attn_decode(p, xx, (kc, vc), pos,
+                                             rolling=True)
+            xx = self._ffn(p, xx)
+            return xx, (kc, vc)
+
+        def super_body(xx, xs):
+            p, kl, vl, kg, vg = xs
+            xx, (kl, vl) = _scan(local_body, xx, (p["local"], kl, vl))
+            xx, (kg, vg) = self._attn_decode(p["global"], xx, (kg, vg), pos)
+            xx = self._ffn(p["global"], xx)
+            return xx, (kl, vl, kg, vg)
+
+        stacked = {"local": params["local"], "global": params["global"]}
+        x, (newc["k_local"], newc["v_local"], newc["k_global"],
+            newc["v_global"]) = _scan(
+            super_body, x, (stacked, cache["k_local"], cache["v_local"],
+                            cache["k_global"], cache["v_global"]))
+        if self.n_tail:
+            x, (newc["k_tail"], newc["v_tail"]) = _scan(
+                local_body, x, (params["tail"], cache["k_tail"],
+                                cache["v_tail"]))
+        return x
+
+    def _decode_hybrid(self, params, x, cache, newc, pos):
+        c = self.cfg
+        shared = params["shared_attn"]
+
+        def mamba_body(xx, xs):
+            p, conv, st = xs
+            h = rms_norm(xx, p["ln_ssm"], c.norm_eps)
+            y, (conv, st) = mamba_block(p, h, c.ssm, conv_cache=conv,
+                                        ssd_state=st)
+            xx = xx + y
+            return xx, (conv, st)
+
+        def super_body(xx, xs):
+            p, conv, st, ks, vs = xs
+            xx, (conv, st) = _scan(mamba_body, xx, (p, conv, st))
+            xx, (ks, vs) = self._attn_decode(shared, xx, (ks, vs), pos)
+            xx = self._ffn(shared, xx)
+            return xx, (conv, st, ks, vs)
+
+        x, (newc["conv"], newc["state"], newc["k_shared"],
+            newc["v_shared"]) = _scan(
+            super_body, x, (params["mamba"], cache["conv"], cache["state"],
+                            cache["k_shared"], cache["v_shared"]))
+        if self.n_tail:
+            x, (newc["conv_tail"], newc["state_tail"]) = _scan(
+                mamba_body, x, (params["tail"], cache["conv_tail"],
+                                cache["state_tail"]))
+        return x
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params: Params, batch: dict, cache_len: int):
+        """Full-sequence forward building a decode cache from the scan
+        outputs. Returns (cache, last_hidden (B, D))."""
+        c = self.cfg
+        if c.kind in ("encdec", "audio"):
+            tokens = batch["tokens"]
+        else:
+            tokens = batch["tokens"]
+        b, s = tokens.shape
+        x, col = self.forward(params, batch, collect=True)
+        cache = self.init_cache(b, cache_len)
+        cache["pos"] = jnp.int32(s)
+
+        def place_full(dst, src):
+            # src (..., B, S, Hkv, hd) -> write into dst (..., B, Smax, ...)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), 0, axis=src.ndim - 3)
+
+        def place_rolling(dst, src, window):
+            # keep the last `window` positions arranged so slot = pos % window
+            if s <= window:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), 0, axis=src.ndim - 3)
+            last = jax.lax.slice_in_dim(src, s - window, s, axis=src.ndim - 3)
+            return jnp.roll(last, s % window, axis=src.ndim - 3).astype(
+                dst.dtype)
+
+        for key, src in col.items():
+            if key in ("conv", "state", "conv_tail", "state_tail"):
+                cache[key] = src.astype(cache[key].dtype)
+            elif key in ("k_local", "v_local", "k_tail", "v_tail"):
+                w = cache[key].shape[-3]
+                cache[key] = place_rolling(cache[key], src, w)
+            else:
+                cache[key] = place_full(cache[key], src)
+        return cache, x[:, -1]
+
+
+def _sinusoid(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, jnp.float32)

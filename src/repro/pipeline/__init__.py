@@ -1,0 +1,8 @@
+from .planner import (  # noqa: F401
+    DeviceClass,
+    HeterogeneousSystem,
+    PipelinePlan,
+    model_chain,
+    plan_pipeline,
+)
+from .runtime import StreamingPipelineRuntime, StageSpec  # noqa: F401

@@ -1,0 +1,161 @@
+"""Pipeline planner: the paper's scheduler as a first-class feature.
+
+Maps a model's layer-block chain onto a heterogeneous accelerator system
+(two device classes — "big" e.g. v5p-class and "little" e.g. v5e-class),
+using FERTAC / 2CATAC / HeRAD to choose the pipeline decomposition, the
+per-stage replication, and the device class per stage. This is the direct
+transplant of the paper's StreamPU scheduling into LLM serving/training:
+
+  task chain      = [ingest] + per-layer blocks + [head] + [emit]
+  w^B / w^L       = analytic roofline step latency per device class
+                    max(FLOPs/peak, bytes/bw) per block
+  replicable      = stateless across *streams* (layer blocks: yes — a
+                    stream's KV/SSM state pins to one replica, exactly like
+                    StreamPU's frame-parallel replication); the stream
+                    multiplexer / ordered emitter are sequential
+  period          = reciprocal throughput (frames == microbatches)
+
+The planner also powers elastic scaling: when the device pool changes
+(node failure / preemption), the chain is simply re-scheduled for the new
+(b, l) and the runtime re-materializes stages from the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import BIG, LITTLE, STRATEGIES, Solution, TaskChain
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    name: str
+    peak_flops: float          # FLOP/s (dense bf16)
+    hbm_bw: float              # B/s
+    count: int
+    watts: float = 0.0         # optional: for the energy report
+
+
+# Default classes: a v5p-like "big" chip and a v5e-like "little" chip.
+BIG_CLASS = DeviceClass("tpu-v5p-class", 459e12, 2765e9, 0, watts=350.0)
+LITTLE_CLASS = DeviceClass("tpu-v5e-class", 197e12, 819e9, 0, watts=170.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousSystem:
+    big: DeviceClass
+    little: DeviceClass
+
+    @classmethod
+    def default(cls, n_big: int, n_little: int) -> "HeterogeneousSystem":
+        return cls(dataclasses.replace(BIG_CLASS, count=n_big),
+                   dataclasses.replace(LITTLE_CLASS, count=n_little))
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCost:
+    name: str
+    flops: float
+    bytes_moved: float
+    replicable: bool = True
+
+    def latency(self, dev: DeviceClass) -> float:
+        """Roofline step latency (s) of this block on one device."""
+        return max(self.flops / dev.peak_flops, self.bytes_moved / dev.hbm_bw)
+
+
+def _layer_cost(cfg: ModelConfig, tokens: int, mode: str) -> tuple[float, float]:
+    """(flops, bytes) of one decoder block for `tokens` tokens per step."""
+    d = cfg.d_model
+    hq, hkv, hd = max(cfg.n_heads, 1), max(cfg.n_kv_heads, 1), cfg.hd
+    if cfg.kind == "ssm" or (cfg.kind == "hybrid"):
+        s = cfg.ssm
+        di, n = s.d_inner(d), s.d_state
+        flops = 2 * tokens * d * (2 * di + 2 * n + s.n_heads(d)) \
+            + 2 * tokens * di * n * 2 + 2 * tokens * di * d
+        params = d * (2 * di + 2 * n + s.n_heads(d)) + di * d
+    else:
+        attn_p = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+        ff = cfg.moe.d_ff_expert * cfg.moe.top_k * 3 * d if cfg.moe \
+            else 3 * d * cfg.d_ff
+        flops = 2 * tokens * (attn_p + ff)
+        if mode != "decode":
+            # quadratic attention term (causal): ~2 * S * tokens * hq * hd
+            flops += 2 * tokens * tokens * hq * hd
+        params = attn_p + (cfg.moe.n_experts * 3 * d * cfg.moe.d_ff_expert
+                           if cfg.moe else 3 * d * cfg.d_ff)
+    byte_per = 2
+    bytes_moved = params * byte_per + tokens * d * byte_per * 4
+    if mode == "decode" and cfg.kind not in ("ssm",):
+        # decode reads the KV cache for the active tokens' streams
+        bytes_moved += tokens * 2 * hkv * hd * byte_per * 512  # ~cache slice
+    return float(flops), float(bytes_moved)
+
+
+def model_chain(cfg: ModelConfig, *, tokens_per_step: int, mode: str,
+                system: HeterogeneousSystem) -> tuple[TaskChain, list[BlockCost]]:
+    """Build the paper-style task chain for a model: per-block w^B / w^L."""
+    blocks: list[BlockCost] = []
+    d = cfg.d_model
+    emb_flops = 0.0
+    emb_bytes = tokens_per_step * d * 2 + cfg.padded_vocab * d * 2 / 64
+    blocks.append(BlockCost("ingest", 1e6, 1e6, replicable=False))
+    blocks.append(BlockCost("embed", emb_flops, emb_bytes))
+    lf, lb = _layer_cost(cfg, tokens_per_step, mode)
+    for i in range(cfg.n_layers):
+        blocks.append(BlockCost(f"layer{i}", lf, lb))
+    head_flops = 2 * tokens_per_step * d * cfg.padded_vocab
+    head_bytes = cfg.padded_vocab * d * 2
+    blocks.append(BlockCost("head", head_flops, head_bytes))
+    blocks.append(BlockCost("emit", 1e6, 1e6, replicable=False))
+    chain = TaskChain(
+        w_big=[b.latency(system.big) * 1e6 for b in blocks],      # µs
+        w_little=[b.latency(system.little) * 1e6 for b in blocks],
+        replicable=[b.replicable for b in blocks],
+        names=[b.name for b in blocks],
+    )
+    return chain, blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    solution: Solution
+    chain: TaskChain
+    period_us: float
+    tokens_per_step: int
+
+    def throughput_tokens_per_s(self) -> float:
+        return self.tokens_per_step / (self.period_us * 1e-6)
+
+    def stage_table(self) -> list[dict]:
+        rows = []
+        for st in self.solution.stages:
+            rows.append({
+                "tasks": [self.chain.names[i]
+                          for i in range(st.start, st.end + 1)],
+                "n_tasks": st.n_tasks(),
+                "devices": st.cores,
+                "class": "big" if st.ctype == BIG else "little",
+                "weight_us": self.chain.weight(st.start, st.end, st.cores,
+                                               st.ctype),
+            })
+        return rows
+
+    def energy_proxy_watts(self, system: HeterogeneousSystem) -> float:
+        b_used = self.solution.cores_used(BIG)
+        l_used = self.solution.cores_used(LITTLE)
+        return b_used * system.big.watts + l_used * system.little.watts
+
+
+def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
+                  tokens_per_step: int, mode: str = "decode",
+                  strategy: str = "herad") -> PipelinePlan:
+    chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
+                           system=system)
+    sol = STRATEGIES[strategy](chain, system.big.count, system.little.count)
+    if sol.is_empty():
+        raise ValueError(
+            f"no feasible schedule for {cfg.name} on b={system.big.count}, "
+            f"l={system.little.count}")
+    return PipelinePlan(sol, chain, sol.period(chain), tokens_per_step)

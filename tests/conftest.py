@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests see the real (single) CPU device — the 512-device override belongs
+# ONLY to the dry-run (repro.launch.dryrun). Distributed-parity tests spawn
+# subprocesses with their own XLA_FLAGS instead.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

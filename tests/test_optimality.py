@@ -1,0 +1,68 @@
+"""Theorem 1 cross-check: HeRAD period-optimality against brute force, and
+reference/vectorized implementation parity."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    brute_force,
+    fertac,
+    herad,
+    herad_reference,
+    make_chain,
+    twocatac,
+)
+
+
+@pytest.mark.parametrize("trial", range(25))
+def test_herad_matches_brute_force(trial):
+    rng = np.random.default_rng(100 + trial)
+    n = int(rng.integers(2, 7))
+    b = int(rng.integers(0, 4))
+    l = int(rng.integers(0, 4))
+    if b + l == 0:
+        l = 1
+    ch = make_chain(rng, n, stateless_ratio=float(rng.uniform(0, 1)))
+    best_p, _, _ = brute_force(ch, b, l)
+    sol = herad(ch, b, l)
+    assert sol.period(ch) == pytest.approx(best_p, rel=1e-12)
+    assert sol.covers(ch)
+    assert sol.cores_used("B") <= b and sol.cores_used("L") <= l
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_vectorized_equals_reference(trial):
+    rng = np.random.default_rng(200 + trial)
+    n = int(rng.integers(4, 14))
+    b = int(rng.integers(1, 7))
+    l = int(rng.integers(1, 7))
+    ch = make_chain(rng, n, stateless_ratio=0.5)
+    a = herad(ch, b, l)
+    r = herad_reference(ch, b, l)
+    assert a.period(ch) == pytest.approx(r.period(ch), abs=0)
+    assert a.core_usage() == r.core_usage()
+
+
+@pytest.mark.parametrize("trial", range(15))
+def test_heuristics_never_beat_optimal(trial):
+    rng = np.random.default_rng(300 + trial)
+    n = int(rng.integers(3, 12))
+    b = int(rng.integers(1, 6))
+    l = int(rng.integers(1, 6))
+    ch = make_chain(rng, n, stateless_ratio=float(rng.uniform(0, 1)))
+    opt = herad(ch, b, l).period(ch)
+    for sol in (fertac(ch, b, l), twocatac(ch, b, l)):
+        if not sol.is_empty():
+            assert sol.period(ch) >= opt - 1e-9
+
+
+def test_memoized_2catac_matches_plain():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        n = int(rng.integers(3, 12))
+        b = int(rng.integers(1, 5))
+        l = int(rng.integers(1, 5))
+        ch = make_chain(rng, n, stateless_ratio=0.5)
+        plain = twocatac(ch, b, l, memoize=False)
+        memo = twocatac(ch, b, l, memoize=True)
+        assert plain.period(ch) == pytest.approx(memo.period(ch))
+        assert plain.core_usage() == memo.core_usage()

@@ -1,0 +1,67 @@
+"""Faithfulness gate: reproduce the paper's own numbers exactly.
+
+Table III (task latencies) totals and Table II (schedule periods for every
+platform x resource x strategy) from the DVB-S2 receiver chain.
+"""
+import pytest
+
+from repro.configs.dvbs2 import (
+    RESOURCES,
+    TABLE2_PERIODS,
+    TOTALS,
+    dvbs2_chain,
+    throughput_mbps,
+)
+from repro.core import BIG, LITTLE, fertac, herad, herad_reference, otac, twocatac
+
+STRATS = {
+    "herad": lambda ch, b, l: herad(ch, b, l),
+    "twocatac": lambda ch, b, l: twocatac(ch, b, l),
+    "fertac": lambda ch, b, l: fertac(ch, b, l),
+    "otac_b": lambda ch, b, l: otac(ch, b, BIG),
+    "otac_l": lambda ch, b, l: otac(ch, l, LITTLE),
+}
+
+
+@pytest.mark.parametrize("platform", ["mac", "x7"])
+def test_table3_totals(platform):
+    ch = dvbs2_chain(platform)
+    assert ch.total(BIG) == pytest.approx(TOTALS[(platform, "B")], abs=0.3)
+    assert ch.total(LITTLE) == pytest.approx(TOTALS[(platform, "L")], abs=0.3)
+    assert ch.n == 23
+    # Rep. column: 10 replicable tasks
+    assert int(ch.replicable.sum()) == 10
+
+
+@pytest.mark.parametrize("platform,res", [
+    (p, r) for p in RESOURCES for r in RESOURCES[p].values()
+])
+@pytest.mark.parametrize("strategy", list(STRATS))
+def test_table2_periods(platform, res, strategy):
+    """Each strategy reproduces its published Table II period (0.1 µs table
+    rounding tolerance)."""
+    b, l = res
+    expected = TABLE2_PERIODS[(platform, res)][strategy]
+    ch = dvbs2_chain(platform)
+    sol = STRATS[strategy](ch, b, l)
+    assert not sol.is_empty()
+    assert sol.covers(ch)
+    assert sol.cores_used(BIG) <= b and sol.cores_used(LITTLE) <= l
+    assert sol.period(ch) == pytest.approx(expected, abs=0.2)
+
+
+def test_herad_reference_matches_vectorized_on_dvbs2():
+    for platform in ("mac", "x7"):
+        ch = dvbs2_chain(platform)
+        for b, l in RESOURCES[platform].values():
+            a = herad(ch, b, l)
+            r = herad_reference(ch, b, l)
+            assert a.period(ch) == pytest.approx(r.period(ch), abs=1e-9)
+            assert a.core_usage() == r.core_usage()
+
+
+def test_throughput_conversion():
+    # S19: OTAC (B) on X7 Ti at period 2867.0 -> ~39.7 Mb/s (Table II)
+    assert throughput_mbps(2867.03, "x7") == pytest.approx(39.7, abs=0.1)
+    # S1: HeRAD on Mac Studio at 1128.75 -> ~50.4 Mb/s
+    assert throughput_mbps(1128.75, "mac") == pytest.approx(50.4, abs=0.1)

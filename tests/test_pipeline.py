@@ -1,0 +1,129 @@
+"""Pipeline planner + streaming runtime: schedule validity, throughput,
+straggler mitigation (work stealing), elastic re-planning."""
+import time
+
+import pytest
+
+from repro.core import BIG, LITTLE
+from repro.models.config import get_config, get_smoke_config
+from repro.pipeline import (
+    HeterogeneousSystem,
+    StageSpec,
+    StreamingPipelineRuntime,
+    model_chain,
+    plan_pipeline,
+)
+
+
+def test_planner_budgets_and_period():
+    sys_ = HeterogeneousSystem.default(6, 8)
+    plan = plan_pipeline(get_config("gemma3-12b"), system=sys_,
+                         tokens_per_step=64, mode="decode")
+    sol = plan.solution
+    assert sol.covers(plan.chain)
+    assert sol.cores_used(BIG) <= 6
+    assert sol.cores_used(LITTLE) <= 8
+    assert plan.period_us == pytest.approx(sol.period(plan.chain))
+    assert plan.throughput_tokens_per_s() > 0
+    # sequential ingest/emit tasks must never be replicated
+    for st in sol.stages:
+        if not plan.chain.is_rep(st.start, st.end):
+            assert st.cores == 1
+
+
+def test_planner_prefers_little_on_ties():
+    """HeRAD's energy objective: using strictly more big cores than the
+    optimum would is never chosen when little cores suffice."""
+    sys_small = HeterogeneousSystem.default(2, 14)
+    plan = plan_pipeline(get_config("stablelm-3b"), system=sys_small,
+                         tokens_per_step=16, mode="decode")
+    b_used = plan.solution.cores_used(BIG)
+    l_used = plan.solution.cores_used(LITTLE)
+    assert l_used >= b_used  # little-heavy system -> little-heavy schedule
+
+
+def test_every_arch_plans():
+    from repro.models.config import list_archs
+    sys_ = HeterogeneousSystem.default(8, 8)
+    for arch in list_archs():
+        plan = plan_pipeline(get_config(arch), system=sys_,
+                             tokens_per_step=32, mode="decode")
+        assert plan.solution.covers(plan.chain), arch
+
+
+def test_runtime_preserves_order_and_applies_stages():
+    stages = [
+        StageSpec("double", lambda x: x * 2, replicas=2),
+        StageSpec("inc", lambda x: x + 1, replicas=1),
+    ]
+    rt = StreamingPipelineRuntime(stages).start()
+    res = rt.run(list(range(40)))
+    rt.stop()
+    assert res["outputs"] == [x * 2 + 1 for x in range(40)]
+
+
+def test_runtime_replication_speeds_up_bottleneck():
+    def slow(x):
+        time.sleep(0.004)
+        return x
+
+    r1 = StreamingPipelineRuntime([StageSpec("s", slow, replicas=1)]).start()
+    p1 = r1.run(list(range(30)), warmup=5)["period_s"]
+    r1.stop()
+    r3 = StreamingPipelineRuntime([StageSpec("s", slow, replicas=3)]).start()
+    p3 = r3.run(list(range(30)), warmup=5)["period_s"]
+    r3.stop()
+    assert p3 < p1 / 1.7  # ~3x ideal, generous margin for CI noise
+
+
+def test_runtime_work_stealing_absorbs_straggler():
+    stages = [StageSpec("s", lambda x: (time.sleep(0.003), x)[1], replicas=3,
+                        delays=(0.0, 0.0, 0.03))]
+    rt = StreamingPipelineRuntime(stages).start()
+    res = rt.run(list(range(60)), warmup=6)
+    rt.stop()
+    counts = {k[1]: v for k, v in res["replica_counts"].items()}
+    # the straggler replica must have processed far fewer frames
+    assert counts[2] < counts[0] / 2
+    assert sum(counts.values()) == 60
+
+
+def test_elastic_replan_after_device_loss():
+    """Losing little cores re-plans to a valid (possibly slower) schedule —
+    the paper's scheduler is the elastic-scaling policy."""
+    cfg = get_config("stablelm-3b")
+    before = plan_pipeline(cfg, system=HeterogeneousSystem.default(4, 12),
+                           tokens_per_step=32, mode="decode")
+    after = plan_pipeline(cfg, system=HeterogeneousSystem.default(4, 6),
+                          tokens_per_step=32, mode="decode")
+    assert after.solution.cores_used(LITTLE) <= 6
+    assert after.period_us >= before.period_us - 1e-9
+
+
+def test_plan_runtime_integration_matches_predicted_period():
+    """Execute a planned schedule with synthetic per-task sleeps equal to the
+    chain weights; the measured period must approach the planned one."""
+    from repro.core import TaskChain, herad
+    w_big = [2.0, 6.0, 6.0, 2.0]   # ms
+    w_little = [4.0, 12.0, 12.0, 4.0]
+    rep = [False, True, True, False]
+    ch = TaskChain(w_big, w_little, rep)
+    sol = herad(ch, 3, 2)
+    plan_period_ms = sol.period(ch)
+
+    class FakePlan:
+        solution = sol
+        chain = ch
+
+    def builder(s, e):
+        def fn(x):
+            # one worker executes tasks s..e serially on its class
+            time.sleep(sum(w_big[i] for i in range(s, e + 1)) / 1e3)
+            return x
+        return fn
+
+    rt = StreamingPipelineRuntime.from_plan(FakePlan, builder).start()
+    res = rt.run(list(range(40)), warmup=8)
+    rt.stop()
+    measured_ms = res["period_s"] * 1e3
+    assert measured_ms == pytest.approx(plan_period_ms, rel=0.5)

@@ -1,0 +1,111 @@
+"""Unit tests for the chain model (Eq. 1-3) and greedy machinery."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BIG,
+    LITTLE,
+    Solution,
+    Stage,
+    TaskChain,
+    compute_stage,
+    fertac,
+    herad,
+    make_chain,
+    max_packing,
+    otac,
+    required_cores,
+    twocatac,
+)
+
+
+@pytest.fixture
+def chain():
+    return TaskChain(
+        w_big=[10, 20, 30, 40, 50],
+        w_little=[20, 45, 60, 90, 100],
+        replicable=[True, False, True, True, True],
+    )
+
+
+def test_eq1_weight(chain):
+    # replicable stage divides by r
+    assert chain.weight(2, 4, 1, BIG) == 120
+    assert chain.weight(2, 4, 3, BIG) == pytest.approx(40)
+    # sequential-containing stage does not
+    assert chain.weight(0, 2, 4, BIG) == 60
+    # r < 1 is infeasible
+    assert math.isinf(chain.weight(0, 0, 0, BIG))
+
+
+def test_eq2_period(chain):
+    sol = Solution((Stage(0, 1, 1, BIG), Stage(2, 4, 2, LITTLE)))
+    assert sol.period(chain) == pytest.approx(max(30, 250 / 2))
+    assert sol.covers(chain)
+
+
+def test_eq3_validity(chain):
+    sol = Solution((Stage(0, 1, 1, BIG), Stage(2, 4, 2, LITTLE)))
+    assert sol.is_valid(chain, b=1, l=2, period=130)
+    assert not sol.is_valid(chain, b=0, l=2, period=130)   # big over budget
+    assert not sol.is_valid(chain, b=1, l=1, period=130)   # little over
+    assert not sol.is_valid(chain, b=1, l=2, period=100)   # period violated
+
+
+def test_max_packing_and_required_cores(chain):
+    # from task 2 (all replicable tail), 1 core, target 95: 30+40 <= 95 < +50
+    assert max_packing(chain, 2, 1, BIG, 95.0) == 3
+    # with 2 cores the whole tail fits: 120/2 = 60 <= 95
+    assert max_packing(chain, 2, 2, BIG, 95.0) == 4
+    # at least one task even if it does not fit
+    assert max_packing(chain, 4, 1, BIG, 1.0) == 4
+    assert required_cores(chain, 2, 4, BIG, 50.0) == 3
+    assert required_cores(chain, 2, 4, BIG, 120.0) == 1
+
+
+def test_compute_stage_extends_replicable(chain):
+    # starting at 2 with plenty of cores at a tight period: the stage extends
+    # over the replicable tail and uses the required replicas
+    e, u = compute_stage(chain, 2, 4, BIG, 40.0)
+    assert e == 4 and u == 3
+
+
+def test_merge_replicable(chain):
+    sol = Solution((Stage(0, 1, 1, BIG), Stage(2, 3, 1, BIG),
+                    Stage(4, 4, 2, BIG)))
+    merged = sol.merge_replicable(chain)
+    assert len(merged.stages) == 2
+    assert merged.stages[1] == Stage(2, 4, 3, BIG)
+    assert merged.period(chain) <= sol.period(chain)
+
+
+def test_single_task_chain():
+    ch = TaskChain([10.0], [30.0], [True])
+    for sol in (herad(ch, 2, 2), fertac(ch, 2, 2), twocatac(ch, 2, 2)):
+        assert sol.covers(ch)
+        assert sol.period(ch) <= 10.0  # at least one big core used
+
+
+def test_zero_budget_side():
+    ch = make_chain(np.random.default_rng(0), 8, 0.5)
+    s_b = otac(ch, 4, BIG)
+    assert s_b.covers(ch) and s_b.cores_used(LITTLE) == 0
+    s_l = otac(ch, 4, LITTLE)
+    assert s_l.covers(ch) and s_l.cores_used(BIG) == 0
+
+
+def test_all_sequential_chain():
+    ch = TaskChain([5, 6, 7], [10, 12, 14], [False] * 3)
+    sol = herad(ch, 2, 2)
+    assert sol.covers(ch)
+    # best possible period is bounded below by the largest sequential task
+    assert sol.period(ch) >= 7
+
+
+def test_all_replicable_chain_uses_everything():
+    ch = TaskChain([10] * 4, [20] * 4, [True] * 4)
+    sol = herad(ch, 2, 2)
+    # single merged stage replicated across cores should reach 40/(2+2eq)
+    assert sol.period(ch) <= 20.0 + 1e-9

@@ -1,0 +1,63 @@
+"""Property-based invariants of the scheduling system (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BIG, LITTLE, fertac, herad, make_chain, twocatac
+
+chains = st.builds(
+    lambda seed, n, sr: make_chain(np.random.default_rng(seed), n, sr),
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 14),
+    sr=st.floats(0.0, 1.0),
+)
+budgets = st.tuples(st.integers(0, 6), st.integers(0, 6)).filter(
+    lambda bl: bl[0] + bl[1] > 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ch=chains, bl=budgets)
+def test_solutions_valid_and_cover(ch, bl):
+    b, l = bl
+    for strat in (herad, fertac, twocatac):
+        sol = strat(ch, b, l)
+        assert not sol.is_empty(), strat.__name__
+        assert sol.covers(ch)
+        assert sol.cores_used(BIG) <= b
+        assert sol.cores_used(LITTLE) <= l
+        # period equals the max stage weight by construction (Eq. 2)
+        assert sol.period(ch) == max(
+            ch.weight(s.start, s.end, s.cores, s.ctype) for s in sol.stages)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ch=chains, bl=budgets)
+def test_herad_is_lower_bound(ch, bl):
+    b, l = bl
+    opt = herad(ch, b, l).period(ch)
+    assert fertac(ch, b, l).period(ch) >= opt - 1e-9
+    assert twocatac(ch, b, l).period(ch) >= opt - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(ch=chains, bl=st.tuples(st.integers(1, 5), st.integers(1, 5)))
+def test_more_resources_never_hurt(ch, bl):
+    b, l = bl
+    p1 = herad(ch, b, l).period(ch)
+    p2 = herad(ch, b + 1, l).period(ch)
+    p3 = herad(ch, b, l + 1).period(ch)
+    assert p2 <= p1 + 1e-9
+    assert p3 <= p1 + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(ch=chains, bl=budgets)
+def test_period_lower_bounds(ch, bl):
+    """P* >= max(total_big / (b+l) adjusted, largest sequential big task) is
+    NOT generally tight, but P* is never below the largest sequential task on
+    the fastest core and never below total work spread over all cores."""
+    b, l = bl
+    p = herad(ch, b, l).period(ch)
+    seq = ch.seq_indices()
+    if len(seq) and b > 0:
+        assert p >= float(np.minimum(ch.w[BIG][seq], ch.w[LITTLE][seq]).max()) - 1e-9
+    assert p >= ch.total(BIG) / (b + l) - 1e-9
