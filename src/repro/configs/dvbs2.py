@@ -12,6 +12,11 @@ schedules/periods exactly, and as the canonical example chain.
 from __future__ import annotations
 
 from repro.core.chain import TaskChain, chain_from_rows
+from repro.energy.model import (
+    POWER_APPLE_M1_ULTRA,
+    POWER_INTEL_ULTRA9_185H,
+    PowerModel,
+)
 
 # (name, replicable, w_big_mac, w_little_mac, w_big_x7, w_little_x7)
 _TASKS = [
@@ -70,6 +75,21 @@ TABLE2_PERIODS = {
 # paper reports information throughput = K * interframe / period.
 K_INFO_BITS = 14232.0
 INTERFRAME = {"mac": 4, "x7": 8}
+
+# Power models for the evaluated platforms (repro.energy.model presets);
+# chain weights are µs, so energies come out in µJ per frame.
+POWER = {
+    "mac": POWER_APPLE_M1_ULTRA,
+    "x7": POWER_INTEL_ULTRA9_185H,
+}
+
+
+def platform_power(platform: str) -> PowerModel:
+    """Power model preset for 'mac' or 'x7'."""
+    try:
+        return POWER[platform]
+    except KeyError:
+        raise ValueError(f"unknown platform {platform!r}") from None
 
 
 def dvbs2_chain(platform: str = "mac") -> TaskChain:

@@ -21,8 +21,22 @@ from .greedy import (  # noqa: F401
     schedule,
     twocatac,
 )
-from .herad import herad, herad_reference  # noqa: F401
+from .herad import (  # noqa: F401
+    extract_solution,
+    herad,
+    herad_reference,
+    herad_table,
+)
 from .brute import brute_force  # noqa: F401
+
+
+def _energad(c, b, l):
+    # Lazy import: repro.energy builds on repro.core, not the other way
+    # around; the strategy table is the one place the layers meet.
+    from repro.energy.pareto import energad
+
+    return energad(c, b, l)
+
 
 STRATEGIES = {
     "herad": lambda c, b, l: herad(c, b, l),
@@ -32,4 +46,6 @@ STRATEGIES = {
     "twocatac_memo": lambda c, b, l: twocatac(c, b, l, memoize=True),
     "otac_b": lambda c, b, l: otac(c, b, BIG),
     "otac_l": lambda c, b, l: otac(c, l, LITTLE),
+    # energy-constrained: min energy among period-optimal schedules
+    "energad": _energad,
 }

@@ -185,16 +185,23 @@ def herad_reference(chain: TaskChain, b: int, l: int,
 
 
 # ------------------------------------------------- vectorized implementation
-def herad(chain: TaskChain, b: int, l: int, merge: bool = True) -> Solution:
-    """Vectorized HeRAD: identical optimum, orders-of-magnitude faster.
+def herad_table(chain: TaskChain, b: int, l: int) -> _Matrix:
+    """Fill and return the full HeRAD solution matrix (vectorized).
+
+    The returned matrix holds the period-optimal solution for EVERY
+    sub-budget (b', l') <= (b, l) at once — cell (n-1, b', l') is the
+    optimum for budgets (b', l'). ``extract_solution`` reads any of them
+    out in O(n), which is what the energy subsystem's Pareto sweep
+    (repro.energy.pareto) exploits to enumerate the whole budget plane
+    from a single DP run.
 
     For each prefix j the whole (b+1, l+1) budget plane is updated at once:
     stage candidates are shifted slices of the prefix plane, the lexicographic
     CompareCells order is an elementwise select, and the neighbour propagation
     is a running lexicographic min along each budget axis.
     """
-    if b + l <= 0:
-        return EMPTY_SOLUTION
+    if b < 0 or l < 0 or b + l <= 0:
+        raise ValueError("need at least one core (b + l >= 1)")
     n = chain.n
     S = _Matrix(n, b, l)
     brange = np.arange(b + 1)
@@ -305,7 +312,23 @@ def herad(chain: TaskChain, b: int, l: int, merge: bool = True) -> Solution:
         cur = cummin_neighbours(tuple(cur))
         for fdst, fsrc in zip(plane(j), cur):
             fdst[...] = fsrc
+    return S
+
+
+def extract_solution(S: _Matrix, chain: TaskChain, b: int, l: int,
+                     merge: bool = True) -> Solution:
+    """Read the optimal solution for sub-budget (b, l) out of a filled table."""
+    if b < 0 or l < 0 or b + l <= 0:
+        return EMPTY_SOLUTION
     sol = _extract_solution(S, chain, b, l)
     if merge and not sol.is_empty():
         sol = sol.merge_replicable(chain)
     return sol
+
+
+def herad(chain: TaskChain, b: int, l: int, merge: bool = True) -> Solution:
+    """Vectorized HeRAD: identical optimum as ``herad_reference``,
+    orders-of-magnitude faster (see ``herad_table``)."""
+    if b + l <= 0:
+        return EMPTY_SOLUTION
+    return extract_solution(herad_table(chain, b, l), chain, b, l, merge=merge)

@@ -1,0 +1,37 @@
+"""Energy subsystem: power models, energy accounting, and the
+(period, energy) bi-objective view of the paper's scheduling problem.
+
+Layers:
+  - :mod:`repro.energy.model`   — per-core-type power models (static/idle +
+    dynamic watts, optional DVFS frequency levels) with presets for the
+    paper's four platforms (Apple, Intel, ARM, AMD);
+  - :mod:`repro.energy.account` — exact per-schedule energy accounting for
+    any :class:`repro.core.Solution` (busy energy from per-stage utilization,
+    idle energy for allocated-but-waiting cores);
+  - :mod:`repro.energy.pareto`  — (period, energy) Pareto frontiers from a
+    single HeRAD DP table, plus the energy-constrained ``energad`` strategy
+    (minimum energy subject to a period bound).
+"""
+from .model import (  # noqa: F401
+    CoreTypePower,
+    PowerModel,
+    DEFAULT_POWER,
+    POWER_AMD_RYZEN_AI9,
+    POWER_APPLE_M1_ULTRA,
+    POWER_ARM_BIG_LITTLE,
+    POWER_INTEL_ULTRA9_185H,
+    PLATFORM_POWER,
+)
+from .account import (  # noqa: F401
+    EnergyReport,
+    StageEnergy,
+    energy,
+    energy_report,
+)
+from .pareto import (  # noqa: F401
+    ParetoPoint,
+    energad,
+    min_energy_under_period,
+    pareto_frontier,
+    sweep_budgets,
+)

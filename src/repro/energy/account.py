@@ -1,0 +1,139 @@
+"""Exact per-schedule energy accounting.
+
+For a solution S operated at period P (one frame enters every P time
+units), each stage (tasks [s, e], r cores of type v) contributes per frame:
+
+    busy energy  =  w([s, e], 1, v)            * P_busy(v)
+    idle energy  = (r * P - w([s, e], 1, v))   * P_idle(v)
+
+The busy term is the total work of the stage per frame — with r replicas
+each core runs at utilization w/(r*P), so the aggregate busy time per
+period is exactly w regardless of the replica count (the runtime's shared
+work queue is work-conserving). The idle term charges allocated-but-waiting
+cores: a stage owns r cores for the whole period but only w of core-time is
+spent computing. Cores never allocated to any stage draw nothing (they are
+assumed parked / available to other jobs).
+
+Energies are in watt x chain-time-unit (µJ for the µs DVB-S2 tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chain import Solution, Stage, TaskChain
+
+from .model import PowerModel
+
+
+def stage_energy_terms(
+    work: float, cores: int, ctype: str, period: float, power: PowerModel,
+    freq: float = 1.0,
+) -> tuple[float, float]:
+    """(busy, idle) energy of one stage per frame at operating ``period``.
+
+    Single source of truth for the stage cost — used by both the
+    accounting report below and the energad DP (repro.energy.pareto), so
+    the DP's objective and the reported energy cannot drift apart. The
+    idle term is clamped at zero: required_cores' ceil epsilon can let
+    ``cores * period`` undershoot ``work`` by a rounding hair.
+    """
+    busy = work * power.busy_watts(ctype, freq)
+    idle = max(cores * period - work, 0.0) * power.idle_watts(ctype)
+    return busy, idle
+
+
+@dataclasses.dataclass(frozen=True)
+class StageEnergy:
+    """Energy breakdown of one stage per frame."""
+
+    stage: Stage
+    busy: float
+    idle: float
+    utilization: float  # per-core busy fraction in [0, 1]
+
+    @property
+    def total(self) -> float:
+        return self.busy + self.idle
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    """Per-frame energy of a schedule evaluated at ``period``."""
+
+    period: float
+    freq_big: float
+    freq_little: float
+    stages: tuple[StageEnergy, ...]
+
+    @property
+    def busy(self) -> float:
+        return sum(s.busy for s in self.stages)
+
+    @property
+    def idle(self) -> float:
+        return sum(s.idle for s in self.stages)
+
+    @property
+    def total(self) -> float:
+        return self.busy + self.idle
+
+    @property
+    def avg_watts(self) -> float:
+        """Average power draw while streaming (energy per frame / period)."""
+        return self.total / self.period if self.period > 0 else 0.0
+
+    def describe(self) -> str:
+        return (f"E={self.total:.1f} (busy={self.busy:.1f} "
+                f"idle={self.idle:.1f}) over P={self.period:.1f} "
+                f"-> {self.avg_watts:.2f} W")
+
+
+def energy_report(
+    chain: TaskChain,
+    solution: Solution,
+    power: PowerModel,
+    period: float | None = None,
+    f_big: float = 1.0,
+    f_little: float = 1.0,
+) -> EnergyReport:
+    """Per-stage energy accounting for ``solution`` on ``chain``.
+
+    ``period`` is the operating period; it defaults to the schedule's
+    achieved period and must be >= it (idle time is measured against the
+    beat the pipeline actually runs at). ``f_big``/``f_little`` are
+    normalized DVFS levels: they scale task latencies by 1/f and dynamic
+    power by f**3 (see repro.energy.model).
+    """
+    if solution.is_empty():
+        raise ValueError("cannot account energy of an empty solution")
+    dvfs = power.scale_chain(chain, f_big, f_little)
+    achieved = solution.period(dvfs)
+    if period is None:
+        period = achieved
+    elif achieved - period > 1e-9 * max(1.0, achieved):
+        # relative guard: required_cores certifies stages with a relative
+        # epsilon on work/period, so the achieved period may legitimately
+        # overshoot a large requested period by O(P * eps)
+        raise ValueError(
+            f"operating period {period} is below the achieved period "
+            f"{achieved}")
+    stages = []
+    for st in solution.stages:
+        freq = f_big if st.ctype == "B" else f_little
+        work = dvfs.stage_sum(st.start, st.end, st.ctype)
+        busy, idle = stage_energy_terms(work, st.cores, st.ctype, period,
+                                        power, freq)
+        util = work / (st.cores * period) if period > 0 else 0.0
+        stages.append(StageEnergy(st, busy, idle, min(util, 1.0)))
+    return EnergyReport(period=period, freq_big=f_big, freq_little=f_little,
+                        stages=tuple(stages))
+
+
+def energy(
+    chain: TaskChain,
+    solution: Solution,
+    power: PowerModel,
+    period: float | None = None,
+) -> float:
+    """Total energy per frame of ``solution`` (see :func:`energy_report`)."""
+    return energy_report(chain, solution, power, period).total

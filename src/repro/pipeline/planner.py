@@ -147,13 +147,48 @@ class PipelinePlan:
         l_used = self.solution.cores_used(LITTLE)
         return b_used * system.big.watts + l_used * system.little.watts
 
+    def energy_report(self, system: HeterogeneousSystem, power=None,
+                      idle_fraction: float = 0.1):
+        """Exact per-step energy accounting (repro.energy.account).
+
+        ``power`` defaults to a model derived from the device classes'
+        ``watts`` fields (``idle_fraction`` of the draw attributed to
+        static/idle power). Chain weights are µs, so energies are µJ per
+        pipeline step; ``report.avg_watts`` is directly in watts.
+        """
+        from repro.energy.account import energy_report
+        from repro.energy.model import PowerModel
+
+        if power is None:
+            power = PowerModel.from_device_classes(
+                system, idle_fraction=idle_fraction)
+        return energy_report(self.chain, self.solution, power)
+
 
 def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
                   tokens_per_step: int, mode: str = "decode",
-                  strategy: str = "herad") -> PipelinePlan:
+                  strategy: str = "herad", power=None) -> PipelinePlan:
+    """Schedule ``cfg``'s layer chain onto ``system``.
+
+    For the energy-constrained ``strategy="energad"`` the optional
+    ``power`` (a repro.energy.model.PowerModel) selects the model to
+    minimize under; it defaults to one derived from the device classes'
+    ``watts`` fields — the same model ``PipelinePlan.energy_report`` scores
+    with, so the planner optimizes what the report measures.
+    """
     chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
                            system=system)
-    sol = STRATEGIES[strategy](chain, system.big.count, system.little.count)
+    if strategy == "energad":
+        from repro.energy.model import PowerModel
+        from repro.energy.pareto import energad
+
+        if power is None:
+            power = PowerModel.from_device_classes(system)
+        sol = energad(chain, system.big.count, system.little.count,
+                      power=power)
+    else:
+        sol = STRATEGIES[strategy](chain, system.big.count,
+                                   system.little.count)
     if sol.is_empty():
         raise ValueError(
             f"no feasible schedule for {cfg.name} on b={system.big.count}, "

@@ -35,6 +35,10 @@ class StageSpec:
     device_class: str = "big"
     # optional artificial per-frame delay per replica (straggler injection)
     delays: Sequence[float] = ()
+    # optional wall-clock energy metering (watts while executing / waiting);
+    # leave at 0 to disable the energy report for this stage
+    busy_watts: float = 0.0
+    idle_watts: float = 0.0
 
 
 class _Sentinel:
@@ -53,6 +57,7 @@ class StreamingPipelineRuntime:
         self._out: list[tuple[int, Any]] = []
         self._out_lock = threading.Lock()
         self._replica_counts: dict[tuple[str, int], int] = {}
+        self._busy_s: dict[tuple[str, int], float] = {}
         self._started = False
 
     # ------------------------------------------------------------- workers
@@ -67,11 +72,14 @@ class StreamingPipelineRuntime:
                 q_in.put(item)  # let sibling replicas see the stop signal
                 return
             seq, payload = item
+            t_busy0 = time.perf_counter()
             if delay:
-                time.sleep(delay)
+                time.sleep(delay)  # injected stragglers count as busy time
             result = spec.fn(payload)
-            self._replica_counts[(spec.name, ri)] = \
-                self._replica_counts.get((spec.name, ri), 0) + 1
+            key = (spec.name, ri)
+            self._busy_s[key] = (self._busy_s.get(key, 0.0)
+                                 + time.perf_counter() - t_busy0)
+            self._replica_counts[key] = self._replica_counts.get(key, 0) + 1
             if q_out is not None:
                 q_out.put((seq, result))
             else:
@@ -97,6 +105,7 @@ class StreamingPipelineRuntime:
         """Push frames through; returns outputs + timing stats."""
         if not self._started:
             self.start()
+        busy0 = dict(self._busy_s)  # meter this run only, not prior runs
         t0 = time.perf_counter()
         marks = {}
         sink = self._queues[-1]
@@ -121,13 +130,39 @@ class StreamingPipelineRuntime:
         steady = marks["end"] - marks.get("steady_start", t0)
         n_steady = expected - warmup
         outs.sort(key=lambda x: x[0])  # ordered emit
-        return {
+        total_s = marks["end"] - t0
+        busy_s = {k: v - busy0.get(k, 0.0) for k, v in self._busy_s.items()
+                  if v - busy0.get(k, 0.0) > 0.0}
+        stats = {
             "outputs": [o for _, o in outs],
-            "total_s": marks["end"] - t0,
+            "total_s": total_s,
             "period_s": steady / max(n_steady, 1),
             "throughput_fps": max(n_steady, 1) / steady if steady > 0 else 0.0,
             "replica_counts": dict(self._replica_counts),
+            "busy_s": busy_s,
         }
+        if any(s.busy_watts or s.idle_watts for s in self.stages):
+            stats["energy_j"] = self.measured_energy_j(total_s, busy_s)
+            stats["avg_power_w"] = (
+                stats["energy_j"] / total_s if total_s > 0 else 0.0)
+        return stats
+
+    def measured_energy_j(self, window_s: float,
+                          busy_s: dict | None = None) -> float:
+        """Wall-clock energy over ``window_s``: per-replica busy time at
+        busy watts plus the remaining allocated time at idle watts.
+
+        ``busy_s`` is the per-(stage, replica) busy-seconds map for the
+        window; defaults to the runtime's lifetime accumulation."""
+        if busy_s is None:
+            busy_s = self._busy_s
+        total = 0.0
+        for spec in self.stages:
+            for ri in range(max(spec.replicas, 1)):
+                busy = min(busy_s.get((spec.name, ri), 0.0), window_s)
+                total += (busy * spec.busy_watts
+                          + (window_s - busy) * spec.idle_watts)
+        return total
 
     def stop(self):
         if self._queues:
@@ -140,11 +175,15 @@ class StreamingPipelineRuntime:
     # -------------------------------------------------------------- elastic
     @classmethod
     def from_plan(cls, plan, stage_fn_builder: Callable[[int, int], Callable],
-                  queue_depth: int = 8) -> "StreamingPipelineRuntime":
+                  queue_depth: int = 8, power=None
+                  ) -> "StreamingPipelineRuntime":
         """Materialize stage workers from a PipelinePlan.
 
         ``stage_fn_builder(start, end)`` returns the callable executing chain
-        tasks [start, end]."""
+        tasks [start, end]. Passing a ``repro.energy.model.PowerModel`` as
+        ``power`` enables wall-clock energy metering: each run() reports
+        ``energy_j`` (per-replica busy time at busy watts + allocated idle
+        time at idle watts) next to the measured period."""
         specs = []
         for st in plan.solution.stages:
             fn = stage_fn_builder(st.start, st.end)
@@ -153,5 +192,7 @@ class StreamingPipelineRuntime:
                 fn=fn,
                 replicas=st.cores if plan.chain.is_rep(st.start, st.end) else 1,
                 device_class="big" if st.ctype == "B" else "little",
+                busy_watts=power.busy_watts(st.ctype) if power else 0.0,
+                idle_watts=power.idle_watts(st.ctype) if power else 0.0,
             ))
         return cls(specs, queue_depth=queue_depth)

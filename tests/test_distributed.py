@@ -12,6 +12,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 _SCRIPT = r"""

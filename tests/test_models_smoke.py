@@ -11,6 +11,8 @@ import pytest
 from repro.models.config import MoEConfig, get_smoke_config, list_archs
 from repro.models.transformer import Model
 
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(0)
 
 

@@ -2,8 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from _hyp import given, settings, st
 
 from repro.models.config import MoEConfig
 from repro.models.moe import (

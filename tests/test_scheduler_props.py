@@ -1,6 +1,9 @@
 """Property-based invariants of the scheduling system (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import BIG, LITTLE, fertac, herad, make_chain, twocatac
 

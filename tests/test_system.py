@@ -4,6 +4,7 @@ integration on a real (smoke-scale) model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt import CheckpointManager
 from repro.core import LITTLE, TaskChain, herad
@@ -19,6 +20,8 @@ from repro.pipeline import (
 )
 from repro.train import OptConfig, TrainConfig, make_train_step
 from repro.train.step import init_train_state
+
+pytestmark = pytest.mark.slow
 
 
 def test_train_failure_replan_resume(tmp_path):
