@@ -1,6 +1,8 @@
 """The paper's own workload: schedule the DVB-S2 receiver chain.
 
-Reproduces Table II for any platform/resources/strategy:
+Reproduces Table II for any platform/resources/strategy, including the
+energy-aware extensions (energad picks the cheapest period-optimal
+schedule; freqherad additionally downclocks slack stages):
 
   PYTHONPATH=src python examples/schedule_dvbs2.py --platform x7 -b 6 -l 8
 """
@@ -10,8 +12,13 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.configs.dvbs2 import dvbs2_chain, throughput_mbps  # noqa: E402
+from repro.configs.dvbs2 import (  # noqa: E402
+    dvbs2_chain,
+    platform_power,
+    throughput_mbps,
+)
 from repro.core import STRATEGIES  # noqa: E402
+from repro.energy import energad, energy, freqherad  # noqa: E402
 
 
 def main():
@@ -21,18 +28,30 @@ def main():
     ap.add_argument("-l", type=int, default=2, help="little cores")
     args = ap.parse_args()
     ch = dvbs2_chain(args.platform)
+    power = platform_power(args.platform)
     print(f"DVB-S2 receiver on {args.platform}: {ch}")
-    for name in ("herad", "twocatac", "fertac", "otac_b", "otac_l"):
-        sol = STRATEGIES[name](ch, args.b, args.l)
+    strategies = dict(
+        {name: STRATEGIES[name]
+         for name in ("herad", "twocatac", "fertac", "otac_b", "otac_l")},
+        # energy-aware variants under the platform's own power model
+        energad=lambda c, b, l: energad(c, b, l, power=power),
+        freqherad=lambda c, b, l: freqherad(c, b, l, power=power),
+    )
+    for name, strategy in strategies.items():
+        sol = strategy(ch, args.b, args.l)
         if sol.is_empty():
             print(f"{name:9s} no feasible schedule")
             continue
         p = sol.period(ch)
+        e_mj = energy(ch, sol, power) / 1e3
         print(f"{name:9s} P={p:9.1f}us -> {throughput_mbps(p, args.platform):6.1f} Mb/s "
+              f"E={e_mj:6.2f} mJ/frame "
               f"(b={sol.cores_used('B')}, l={sol.cores_used('L')})")
         for st in sol.stages:
             tasks = ", ".join(ch.names[i] for i in range(st.start, st.end + 1))
-            print(f"   [{st.cores}x{st.ctype}] {tasks}")
+            freq = getattr(st, "freq", 1.0)
+            at = f"@{freq:g}" if freq != 1.0 else ""
+            print(f"   [{st.cores}x{st.ctype}{at}] {tasks}")
 
 
 if __name__ == "__main__":

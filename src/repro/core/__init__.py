@@ -1,6 +1,31 @@
-# The paper's primary contribution: energy-aware scheduling of
-# partially-replicable task chains on two types of resources
-# (FERTAC / 2CATAC greedy heuristics + HeRAD optimal DP).
+"""Scheduling core: the paper's strategies for partially-replicable task
+chains on two types of resources.
+
+The problem (paper Section III): a linear chain of n tasks, each with a
+per-core-type latency w_i^v for v in {big, little} (µs in the DVB-S2
+tables), must be cut into consecutive pipeline stages; replicable
+(stateless) stages may run on r cores at weight w/r, sequential ones are
+pinned to one core. The objective is the minimum period — the reciprocal
+throughput of the pipeline — under core budgets (b, l).
+
+Strategies (all take ``(chain, b, l)`` and return a
+:class:`~repro.core.chain.Solution`; see ``STRATEGIES``):
+
+- ``herad`` / ``herad_ref``: the exact dynamic program (Theorem 1),
+  vectorized / faithful scalar pseudo-code.
+- ``fertac``: greedy, little-cores-first stage packing inside a binary
+  search over the period.
+- ``twocatac`` / ``twocatac_memo``: greedy trying both core types per
+  stage (exponential as in the paper / memoized polynomial variant).
+- ``otac_b`` / ``otac_l``: homogeneous (single-type) baselines.
+- ``energad``: minimum energy under a period bound (exact DP, defined in
+  ``repro.energy.pareto``; energies in watt x time-unit, µJ for µs
+  chains).
+- ``freqherad``: DVFS-aware — assigns (core type, replica count,
+  frequency level) per stage, lexicographically optimizing (period,
+  energy); returns a :class:`~repro.core.dvfs.FreqSolution`. Defined in
+  ``repro.energy.pareto`` on top of :mod:`repro.core.dvfs`.
+"""
 from .chain import (  # noqa: F401
     BIG,
     LITTLE,
@@ -9,6 +34,7 @@ from .chain import (  # noqa: F401
     Stage,
     TaskChain,
     chain_from_rows,
+    cores_for_work,
     make_chain,
     max_packing,
     required_cores,
@@ -27,6 +53,15 @@ from .herad import (  # noqa: F401
     herad_reference,
     herad_table,
 )
+from .dvfs import (  # noqa: F401
+    EMPTY_FREQ_SOLUTION,
+    FreqSolution,
+    FreqStage,
+    annotate_frequency,
+    dvfs_tables,
+    extract_dvfs_solution,
+    scale_chain,
+)
 from .brute import brute_force  # noqa: F401
 
 
@@ -36,6 +71,14 @@ def _energad(c, b, l):
     from repro.energy.pareto import energad
 
     return energad(c, b, l)
+
+
+def _freqherad(c, b, l):
+    # Same lazy-import layering as energad: the DVFS DP needs a power
+    # model (repro.energy), the core layer only the representation.
+    from repro.energy.pareto import freqherad
+
+    return freqherad(c, b, l)
 
 
 STRATEGIES = {
@@ -48,4 +91,7 @@ STRATEGIES = {
     "otac_l": lambda c, b, l: otac(c, l, LITTLE),
     # energy-constrained: min energy among period-optimal schedules
     "energad": _energad,
+    # DVFS-aware: per-stage (type, replicas, frequency), lexicographic
+    # (period, energy) — returns a FreqSolution
+    "freqherad": _freqherad,
 }

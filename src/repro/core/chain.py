@@ -228,6 +228,20 @@ class Solution:
 EMPTY_SOLUTION = Solution(())
 
 
+def cores_for_work(work: float, period: float) -> int:
+    """Minimum cores so that ``work`` replicated over them meets ``period``.
+
+    The scalar core of RequiredCores (Algo. 3): max(1, ceil(work / period))
+    with a tiny epsilon guarding against float round-off when the division
+    is exact. Exposed separately so DVFS-scaled work (work / f, see
+    repro.core.dvfs) is priced with bit-identical arithmetic.
+    """
+    if period <= 0:
+        return 10**9
+    q = work / period
+    return max(1, int(math.ceil(q - _CEIL_EPS)))
+
+
 def required_cores(chain: TaskChain, s: int, e: int, v: str, period: float) -> int:
     """RequiredCores (Algo. 3): ceil(w([τ_s, τ_e], 1, v) / P).
 
@@ -235,11 +249,7 @@ def required_cores(chain: TaskChain, s: int, e: int, v: str, period: float) -> i
     (the paper uses integer weights in simulation; the real-world tables use
     0.1 µs-precision floats).
     """
-    total = chain.stage_sum(s, e, v)
-    if period <= 0:
-        return 10**9
-    q = total / period
-    return max(1, int(math.ceil(q - _CEIL_EPS)))
+    return cores_for_work(chain.stage_sum(s, e, v), period)
 
 
 def max_packing(chain: TaskChain, s: int, c: int, v: str, period: float) -> int:

@@ -1,0 +1,242 @@
+"""DVFS-aware scheduling primitives: frequency-annotated solutions and
+frequency-indexed HeRAD tables.
+
+This module adds the frequency dimension to the paper's scheduling model
+(the ROADMAP's "DVFS-aware HeRAD" item). A stage is extended from
+(tasks, replicas, core type) to (tasks, replicas, core type, frequency):
+running at normalized DVFS level ``f`` multiplies task latency by ``1/f``
+(and, in the energy layer, dynamic power by ``f**3`` — see
+``repro.energy.model``). Everything here is pure period machinery with no
+power-model dependency; joule-costing of frequency-annotated solutions
+lives in ``repro.energy`` (account / pareto), which builds on this module.
+
+Two building blocks:
+
+- :class:`FreqSolution` / :class:`FreqStage`: a schedule whose stages each
+  carry a frequency level. ``FreqSolution.period`` evaluates stage weights
+  as ``w(s, e, r, v) / f`` in the chain's own time unit (µs for the DVB-S2
+  tables).
+- :func:`dvfs_tables` / :func:`extract_dvfs_solution`: the
+  frequency-indexed HeRAD table. For each global per-core-type profile
+  (f_big, f_little) drawn from the level grid it runs the vectorized
+  ``herad_table`` on the 1/f-scaled chain, so one call yields the
+  period-optimal decomposition for EVERY sub-budget (b', l') AND every
+  profile — the third axis the energy layer's DVFS Pareto sweep
+  (``repro.energy.pareto.sweep_budgets_freq``) enumerates.
+
+Per-stage (rather than per-profile) frequency choice only matters for the
+energy objective — latency is monotone in f, so a period-optimal schedule
+always clocks every stage at the highest level. The exact per-stage
+frequency assignment is therefore done by the min-energy DP in
+``repro.energy.pareto.min_energy_under_period_freq`` (the FreqHeRAD
+strategy), which reuses this module's representation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Mapping
+
+from .chain import BIG, LITTLE, Solution, Stage, TaskChain
+from .herad import _Matrix, extract_solution, herad_table
+
+
+def scale_chain(chain: TaskChain, f_big: float = 1.0,
+                f_little: float = 1.0) -> TaskChain:
+    """DVFS view of a chain: task latencies scale as ``1/f`` per core type.
+
+    Returns ``chain`` itself when both frequencies are nominal (1.0), so
+    the scaled view is free on the common path. Frequencies must be
+    positive; arbitrarily small values are allowed (weights grow as 1/f
+    but stay finite and positive, so the scaled chain is still a valid
+    ``TaskChain``).
+    """
+    if f_big <= 0 or f_little <= 0:
+        raise ValueError("frequencies must be positive")
+    if f_big == 1.0 and f_little == 1.0:
+        return chain
+    return TaskChain(
+        w_big=chain.w[BIG] / f_big,
+        w_little=chain.w[LITTLE] / f_little,
+        replicable=chain.replicable,
+        names=chain.names,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqStage:
+    """One pipeline stage with a DVFS level: tasks [start, end] on
+    ``cores`` cores of ``ctype`` clocked at normalized frequency ``freq``."""
+
+    start: int
+    end: int
+    cores: int
+    ctype: str
+    freq: float = 1.0
+
+    def n_tasks(self) -> int:
+        return self.end - self.start + 1
+
+    def weight(self, chain: TaskChain) -> float:
+        """Stage weight at this stage's frequency: w(s, e, r, v) / f."""
+        return chain.weight(self.start, self.end, self.cores, self.ctype) \
+            / self.freq
+
+    def work(self, chain: TaskChain) -> float:
+        """Total per-frame busy time of the stage: sum(w) / f (all replicas)."""
+        return chain.stage_sum(self.start, self.end, self.ctype) / self.freq
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqSolution:
+    """A pipelined + replicated + frequency-scaled solution S = (s, r, v, f).
+
+    The DVFS analogue of :class:`repro.core.Solution`; all methods mirror
+    it with latencies divided by the per-stage frequency. Periods are in
+    the chain's time unit (µs for the DVB-S2 tables).
+    """
+
+    stages: tuple[FreqStage, ...]
+
+    # -------------------------------------------------------------- queries
+    def is_empty(self) -> bool:
+        return len(self.stages) == 0
+
+    def period(self, chain: TaskChain) -> float:
+        """Max frequency-scaled stage weight (Eq. 2 with w -> w/f)."""
+        if self.is_empty():
+            return math.inf
+        return max(st.weight(chain) for st in self.stages)
+
+    def cores_used(self, ctype: str) -> int:
+        return sum(st.cores for st in self.stages if st.ctype == ctype)
+
+    def core_usage(self) -> tuple[int, int]:
+        return self.cores_used(BIG), self.cores_used(LITTLE)
+
+    def covers(self, chain: TaskChain) -> bool:
+        """True iff the stages exactly partition [0, n-1]."""
+        if self.is_empty():
+            return False
+        nxt = 0
+        for st in self.stages:
+            if st.start != nxt or st.end < st.start or st.cores < 1:
+                return False
+            nxt = st.end + 1
+        return nxt == chain.n
+
+    def freq_profile(self) -> tuple[float, ...]:
+        """Per-stage frequency levels, in stage order."""
+        return tuple(st.freq for st in self.stages)
+
+    def freq_profile_str(self) -> str:
+        """Human/CSV form of the profile: "nominal" or e.g. "1/0.75/1"."""
+        if self.is_nominal():
+            return "nominal"
+        return "/".join(f"{f:g}" for f in self.freq_profile())
+
+    def is_nominal(self) -> bool:
+        """True iff every stage runs at the nominal frequency (1.0)."""
+        return all(st.freq == 1.0 for st in self.stages)
+
+    def to_solution(self) -> Solution:
+        """Drop the frequency annotation (stages keep cores and type)."""
+        return Solution(tuple(
+            Stage(st.start, st.end, st.cores, st.ctype) for st in self.stages
+        ))
+
+    # --------------------------------------------------------- post-passes
+    def merge_replicable(self, chain: TaskChain) -> "FreqSolution":
+        """Merge consecutive replicable stages on the same type AND level.
+
+        The merge invariance of ``Solution.merge_replicable`` only holds
+        when both stages run at the same frequency: then the combined
+        weight (w1 + w2) / (f * (r1 + r2)) <= max of the parts, and both
+        busy and idle energy are additive.
+        """
+        if self.is_empty():
+            return self
+        merged: list[FreqStage] = [self.stages[0]]
+        for st in self.stages[1:]:
+            last = merged[-1]
+            if (
+                st.ctype == last.ctype
+                and st.freq == last.freq
+                and chain.is_rep(last.start, st.end)
+            ):
+                merged[-1] = FreqStage(last.start, st.end,
+                                       last.cores + st.cores, st.ctype, st.freq)
+            else:
+                merged.append(st)
+        return FreqSolution(tuple(merged))
+
+    def describe(self, chain: TaskChain) -> str:
+        if self.is_empty():
+            return "<no solution>"
+        parts = [
+            f"({st.n_tasks()},{st.cores}{st.ctype}@{st.freq:g})"
+            for st in self.stages
+        ]
+        b_used, l_used = self.core_usage()
+        return (
+            f"P={self.period(chain):.4f} stages={len(self.stages)} "
+            f"b={b_used} l={l_used} :: " + ",".join(parts)
+        )
+
+
+EMPTY_FREQ_SOLUTION = FreqSolution(())
+
+
+def annotate_frequency(solution: Solution, f_big: float = 1.0,
+                       f_little: float = 1.0) -> FreqSolution:
+    """Lift a nominal :class:`Solution` to a :class:`FreqSolution` with a
+    global per-core-type frequency profile."""
+    if f_big <= 0 or f_little <= 0:
+        raise ValueError("frequencies must be positive")
+    return FreqSolution(tuple(
+        FreqStage(st.start, st.end, st.cores, st.ctype,
+                  f_big if st.ctype == BIG else f_little)
+        for st in solution.stages
+    ))
+
+
+# ------------------------------------------------- frequency-indexed tables
+def dvfs_tables(
+    chain: TaskChain, b: int, l: int, freq_levels: Iterable[float],
+) -> dict[tuple[float, float], tuple[_Matrix, TaskChain]]:
+    """Frequency-indexed HeRAD tables over the (f_big, f_little) grid.
+
+    For every profile in the cross product of ``freq_levels`` (deduplicated,
+    ascending) this runs the vectorized HeRAD DP (``herad_table``) on the
+    1/f-scaled chain. Each entry maps the profile to its filled solution
+    matrix plus the scaled chain it was computed on, ready for
+    :func:`extract_dvfs_solution` — which, like plain ``extract_solution``,
+    can read out the optimum for ANY sub-budget (b', l') <= (b, l). The
+    energy layer sweeps this (budget x budget x profile) cube to build
+    DVFS Pareto frontiers.
+    """
+    levels = sorted(set(float(f) for f in freq_levels))
+    if not levels or levels[0] <= 0:
+        raise ValueError("freq_levels must be positive")
+    tables: dict[tuple[float, float], tuple[_Matrix, TaskChain]] = {}
+    for fb in levels:
+        for fl in levels:
+            scaled = scale_chain(chain, fb, fl)
+            tables[(fb, fl)] = (herad_table(scaled, b, l), scaled)
+    return tables
+
+
+def extract_dvfs_solution(
+    tables: Mapping[tuple[float, float], tuple[_Matrix, TaskChain]],
+    profile: tuple[float, float],
+    b: int, l: int,
+    merge: bool = True,
+) -> FreqSolution:
+    """Read the period-optimal schedule for ``profile`` at sub-budget (b, l)
+    out of a :func:`dvfs_tables` result, annotated with the profile's
+    frequencies."""
+    table, scaled = tables[profile]
+    sol = extract_solution(table, scaled, b, l, merge=merge)
+    if sol.is_empty():
+        return EMPTY_FREQ_SOLUTION
+    return annotate_frequency(sol, *profile)

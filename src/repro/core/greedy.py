@@ -218,7 +218,15 @@ def schedule(
 
 # ------------------------------------------------------------- entry points
 def fertac(chain: TaskChain, b: int, l: int, eps_scale: float = 1.0) -> Solution:
-    """FERTAC: First Efficient Resources for TAsk Chains."""
+    """FERTAC: First Efficient Resources for TAsk Chains (Algos. 1 + 4).
+
+    Greedy heuristic: packs stages little-cores-first inside the binary
+    search over the period, O(n log(n * w_max) ) per probe. ``b``/``l``
+    are the big/little core budgets; periods are in the chain's time unit
+    (µs for the DVB-S2 tables). Near-optimal in the paper's simulations
+    (< 1.6% mean slowdown vs HeRAD); may return EMPTY_SOLUTION when its
+    greedy packing finds no feasible split even though one exists.
+    """
     return schedule(chain, b, l, fertac_compute_solution, eps_scale)
 
 
@@ -226,10 +234,14 @@ def twocatac(
     chain: TaskChain, b: int, l: int, eps_scale: float = 1.0,
     memoize: bool = False,
 ) -> Solution:
-    """2CATAC: Two-Choice Allocation for TAsk Chains.
+    """2CATAC: Two-Choice Allocation for TAsk Chains (Algos. 1 + 5 + 6).
 
-    ``memoize=False`` is the paper's exponential recursion; ``memoize=True``
-    is the result-identical DP variant (beyond-paper speedup).
+    Greedy heuristic trying BOTH core types per stage and keeping the
+    better suffix per ChooseBestSolution. ``b``/``l`` are the big/little
+    core budgets; periods are in the chain's time unit (µs for the DVB-S2
+    tables). ``memoize=False`` is the paper's exponential recursion;
+    ``memoize=True`` is the result-identical DP variant (beyond-paper
+    speedup — see EXPERIMENTS.md §Perf-algorithms).
     """
 
     def cs(c: TaskChain, s: int, bb: int, ll: int, p: float) -> Solution:
@@ -241,9 +253,11 @@ def twocatac(
 def otac(chain: TaskChain, p: int, ctype: str, eps_scale: float = 1.0) -> Solution:
     """OTAC restricted-homogeneous baseline: all ``p`` cores of one type.
 
-    Schedules through the same binary search + greedy packing machinery with
-    the other resource count at 0 (FERTAC's ComputeSolution degenerates to
-    OTAC's greedy packing on a single type).
+    ``ctype`` is ``BIG`` ("B") or ``LITTLE`` ("L"); periods are in the
+    chain's time unit (µs for the DVB-S2 tables). Schedules through the
+    same binary search + greedy packing machinery with the other resource
+    count at 0 (FERTAC's ComputeSolution degenerates to OTAC's greedy
+    packing on a single type).
     """
     if ctype == BIG:
         return schedule(chain, p, 0, fertac_compute_solution, eps_scale)

@@ -166,7 +166,15 @@ def _extract_solution(S: _Matrix, chain: TaskChain, b: int, l: int) -> Solution:
 # ------------------------------------------------------------------ Algo. 7
 def herad_reference(chain: TaskChain, b: int, l: int,
                     merge: bool = True) -> Solution:
-    """Faithful scalar-loop HeRAD (Algos. 7-11)."""
+    """Faithful scalar-loop HeRAD (Algos. 7-11).
+
+    ``b``/``l`` are the big/little core budgets (the paper's R_B, R_L);
+    the returned Solution's period is in the chain's own time unit (µs
+    for the DVB-S2 tables). ``merge`` applies the paper's replicable-stage
+    merge post-pass. Returns EMPTY_SOLUTION when no core is budgeted.
+    Prefer :func:`herad` (identical optimum, vectorized) outside of
+    pseudo-code conformance tests.
+    """
     if b + l <= 0 or (b <= 0 and l <= 0):
         return EMPTY_SOLUTION
     n = chain.n
@@ -317,7 +325,13 @@ def herad_table(chain: TaskChain, b: int, l: int) -> _Matrix:
 
 def extract_solution(S: _Matrix, chain: TaskChain, b: int, l: int,
                      merge: bool = True) -> Solution:
-    """Read the optimal solution for sub-budget (b, l) out of a filled table."""
+    """Read the optimal solution for sub-budget (b, l) out of a filled table.
+
+    ``S`` must be a matrix returned by :func:`herad_table` for ``chain``
+    with budgets >= (b, l); extraction is O(n) per call (Algo. 11 plus
+    the ``merge`` post-pass). Returns EMPTY_SOLUTION for an empty budget
+    or an infeasible cell.
+    """
     if b < 0 or l < 0 or b + l <= 0:
         return EMPTY_SOLUTION
     sol = _extract_solution(S, chain, b, l)
@@ -327,8 +341,14 @@ def extract_solution(S: _Matrix, chain: TaskChain, b: int, l: int,
 
 
 def herad(chain: TaskChain, b: int, l: int, merge: bool = True) -> Solution:
-    """Vectorized HeRAD: identical optimum as ``herad_reference``,
-    orders-of-magnitude faster (see ``herad_table``)."""
+    """Period-optimal schedule of ``chain`` on ``b`` big + ``l`` little cores.
+
+    Vectorized HeRAD: identical optimum as ``herad_reference``,
+    orders-of-magnitude faster (see ``herad_table``). The solution's
+    period — Eq. (2), the pipeline's reciprocal throughput — is in the
+    chain's time unit (µs for the DVB-S2 tables); secondary tie-breaking
+    prefers trading big cores for little ones (CompareCells, Algo. 10).
+    """
     if b + l <= 0:
         return EMPTY_SOLUTION
     return extract_solution(herad_table(chain, b, l), chain, b, l, merge=merge)

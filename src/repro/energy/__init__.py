@@ -6,15 +6,21 @@ Layers:
     dynamic watts, optional DVFS frequency levels) with presets for the
     paper's four platforms (Apple, Intel, ARM, AMD);
   - :mod:`repro.energy.account` — exact per-schedule energy accounting for
-    any :class:`repro.core.Solution` (busy energy from per-stage utilization,
-    idle energy for allocated-but-waiting cores);
+    any :class:`repro.core.Solution` or frequency-annotated
+    :class:`repro.core.dvfs.FreqSolution` (busy energy from per-stage
+    utilization, idle energy for allocated-but-waiting cores);
   - :mod:`repro.energy.pareto`  — (period, energy) Pareto frontiers from a
-    single HeRAD DP table, plus the energy-constrained ``energad`` strategy
-    (minimum energy subject to a period bound).
+    single HeRAD DP table, the energy-constrained ``energad`` strategy
+    (minimum energy subject to a period bound), and the DVFS-aware
+    ``freqherad`` strategy plus the frequency-swept ``dvfs_frontier``.
+
+Units: chain weights set the time unit (µs for the DVB-S2 tables), powers
+are watts, so energies come out in watt x time-unit (µJ per frame).
 """
 from .model import (  # noqa: F401
     CoreTypePower,
     PowerModel,
+    DEFAULT_DVFS_POWER,
     DEFAULT_POWER,
     POWER_AMD_RYZEN_AI9,
     POWER_APPLE_M1_ULTRA,
@@ -30,8 +36,12 @@ from .account import (  # noqa: F401
 )
 from .pareto import (  # noqa: F401
     ParetoPoint,
+    dvfs_frontier,
     energad,
+    freqherad,
     min_energy_under_period,
+    min_energy_under_period_freq,
     pareto_frontier,
     sweep_budgets,
+    sweep_budgets_freq,
 )

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.chain import Solution, Stage, TaskChain
+from repro.core.dvfs import FreqSolution, FreqStage
 
 from .model import PowerModel
 
@@ -44,9 +45,14 @@ def stage_energy_terms(
 
 @dataclasses.dataclass(frozen=True)
 class StageEnergy:
-    """Energy breakdown of one stage per frame."""
+    """Energy breakdown of one stage per frame.
 
-    stage: Stage
+    ``stage`` is the costed :class:`repro.core.Stage`, or a
+    :class:`repro.core.dvfs.FreqStage` when a frequency-annotated solution
+    was accounted — its per-stage DVFS level is then ``stage.freq``.
+    """
+
+    stage: Stage | FreqStage
     busy: float
     idle: float
     utilization: float  # per-core busy fraction in [0, 1]
@@ -90,7 +96,7 @@ class EnergyReport:
 
 def energy_report(
     chain: TaskChain,
-    solution: Solution,
+    solution: Solution | FreqSolution,
     power: PowerModel,
     period: float | None = None,
     f_big: float = 1.0,
@@ -101,11 +107,23 @@ def energy_report(
     ``period`` is the operating period; it defaults to the schedule's
     achieved period and must be >= it (idle time is measured against the
     beat the pipeline actually runs at). ``f_big``/``f_little`` are
-    normalized DVFS levels: they scale task latencies by 1/f and dynamic
-    power by f**3 (see repro.energy.model).
+    normalized DVFS levels applied globally per core type: they scale task
+    latencies by 1/f and dynamic power by f**3 (see repro.energy.model).
+
+    Frequency-annotated solutions (:class:`repro.core.dvfs.FreqSolution`,
+    e.g. from the ``freqherad`` strategy) are costed at their own
+    per-stage levels; the global ``f_big``/``f_little`` knobs must then be
+    left at 1.0, and the report's ``freq_big``/``freq_little`` stay 1.0 —
+    the levels live on each ``StageEnergy.stage.freq`` instead.
     """
     if solution.is_empty():
         raise ValueError("cannot account energy of an empty solution")
+    if isinstance(solution, FreqSolution):
+        if f_big != 1.0 or f_little != 1.0:
+            raise ValueError(
+                "frequency-annotated solutions carry per-stage levels; "
+                "leave f_big/f_little at 1.0")
+        return _freq_energy_report(chain, solution, power, period)
     dvfs = power.scale_chain(chain, f_big, f_little)
     achieved = solution.period(dvfs)
     if period is None:
@@ -129,9 +147,39 @@ def energy_report(
                         stages=tuple(stages))
 
 
+def _freq_energy_report(
+    chain: TaskChain,
+    solution: FreqSolution,
+    power: PowerModel,
+    period: float | None = None,
+) -> EnergyReport:
+    """Accounting for per-stage-frequency solutions.
+
+    Uses the same :func:`stage_energy_terms` the freqherad DP optimizes
+    (work = stage sum / f, busy watts at the stage's level), so reported
+    energies match the DP objective bit for bit.
+    """
+    achieved = solution.period(chain)
+    if period is None:
+        period = achieved
+    elif achieved - period > 1e-9 * max(1.0, achieved):
+        raise ValueError(
+            f"operating period {period} is below the achieved period "
+            f"{achieved}")
+    stages = []
+    for st in solution.stages:
+        work = st.work(chain)
+        busy, idle = stage_energy_terms(work, st.cores, st.ctype, period,
+                                        power, st.freq)
+        util = work / (st.cores * period) if period > 0 else 0.0
+        stages.append(StageEnergy(st, busy, idle, min(util, 1.0)))
+    return EnergyReport(period=period, freq_big=1.0, freq_little=1.0,
+                        stages=tuple(stages))
+
+
 def energy(
     chain: TaskChain,
-    solution: Solution,
+    solution: Solution | FreqSolution,
     power: PowerModel,
     period: float | None = None,
 ) -> float:

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.chain import BIG, LITTLE, TaskChain
+from repro.core.dvfs import scale_chain as _scale_chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,32 +81,34 @@ class PowerModel:
 
     def scale_chain(self, chain: TaskChain, f_big: float = 1.0,
                     f_little: float = 1.0) -> TaskChain:
-        """DVFS view of a chain: task latency scales as 1/f per core type."""
-        if f_big <= 0 or f_little <= 0:
-            raise ValueError("frequencies must be positive")
-        if f_big == 1.0 and f_little == 1.0:
-            return chain
-        return TaskChain(
-            w_big=chain.w[BIG] / f_big,
-            w_little=chain.w[LITTLE] / f_little,
-            replicable=chain.replicable,
-            names=chain.names,
-        )
+        """DVFS view of a chain: task latency scales as 1/f per core type.
+
+        Delegates to :func:`repro.core.dvfs.scale_chain` (the single
+        source of the 1/f latency rule); kept as a method for the
+        historical call sites. Returns ``chain`` itself at nominal
+        frequencies.
+        """
+        return _scale_chain(chain, f_big, f_little)
 
     @classmethod
     def from_device_classes(cls, system, idle_fraction: float = 0.1,
-                            name: str = "device-classes") -> "PowerModel":
+                            name: str = "device-classes",
+                            freq_levels: tuple[float, ...] = (1.0,),
+                            ) -> "PowerModel":
         """Build a model from a planner HeterogeneousSystem.
 
         ``DeviceClass.watts`` is the busy draw; ``idle_fraction`` of it is
         attributed to static (idle) power, the rest to dynamic.
+        ``freq_levels`` opts the model into DVFS (e.g. for the planner's
+        ``freqherad`` strategy); the default keeps it nominal-only.
         """
         def split(watts: float) -> CoreTypePower:
             return CoreTypePower(static_watts=watts * idle_fraction,
                                  dynamic_watts=watts * (1.0 - idle_fraction))
 
         return cls(name=name, big=split(system.big.watts),
-                   little=split(system.little.watts))
+                   little=split(system.little.watts),
+                   freq_levels=freq_levels)
 
 
 # --------------------------------------------------------------- presets
@@ -147,6 +150,15 @@ DEFAULT_POWER = PowerModel(
     name="default",
     big=CoreTypePower(static_watts=0.10, dynamic_watts=0.90),
     little=CoreTypePower(static_watts=0.03, dynamic_watts=0.32),
+)
+
+# The same synthetic default with a generic three-step DVFS ladder; used
+# as the fallback model of the "freqherad" strategy registration.
+DEFAULT_DVFS_POWER = PowerModel(
+    name="default-dvfs",
+    big=DEFAULT_POWER.big,
+    little=DEFAULT_POWER.little,
+    freq_levels=(0.5, 0.75, 1.0),
 )
 
 PLATFORM_POWER = {

@@ -1,6 +1,11 @@
-"""(period, energy) Pareto frontiers and energy-constrained scheduling.
+"""(period, energy) Pareto frontiers, energy-constrained and DVFS-aware
+scheduling.
 
-Two complementary tools on top of the HeRAD dynamic program:
+Units follow the chain: task weights are in the chain's time unit (µs for
+the DVB-S2 tables), powers in watts, so energies are watt x time-unit
+(µJ per frame for µs chains) and periods are in the same unit as weights.
+
+Three complementary tools on top of the HeRAD dynamic program:
 
 - :func:`sweep_budgets` / :func:`pareto_frontier`: HeRAD's solution matrix
   already contains the period-optimal schedule for EVERY sub-budget
@@ -26,6 +31,25 @@ Two complementary tools on top of the HeRAD dynamic program:
   where cost(stage, r, v) = w * P_busy(v) + (r * P_max - w) * P_idle(v)
   and r is the minimum feasible core count (energy is non-decreasing in r
   at a fixed period, so larger counts never help).
+
+- :func:`min_energy_under_period_freq` / :func:`freqherad` (strategy name
+  ``"freqherad"``): the DVFS extension. Every stage is assigned
+  (core type, replica count, frequency level) jointly: running tasks
+  [i, j] on r cores of type v at level f takes (w / f) / r per frame and
+  draws P_busy(v, f) = static + dynamic * f**3 while busy. The stage cost
+
+      cost([i, j], r, v, f) = (w/f) * P_busy(v, f)
+                              + (r * P_max - w/f) * P_idle(v)
+
+  stays additive at a fixed operating period, so the same min-sum DP
+  applies with the candidate set widened by the frequency axis (an extra
+  |F| factor: O(n^2 * |F| * b * l) states x transitions). FreqHeRAD is the
+  lexicographic (period, energy) optimum: P_max defaults to the best
+  period achievable at the highest frequency level (plain HeRAD on the
+  1/f_max-scaled chain — reusing ``herad_table`` machinery via
+  ``repro.core.dvfs``), and the DP then spends any per-stage slack on
+  downclocking. :func:`dvfs_frontier` sweeps frequency as a third axis of
+  the Pareto enumeration.
 """
 from __future__ import annotations
 
@@ -37,23 +61,38 @@ from repro.core.chain import (
     LITTLE,
     EMPTY_SOLUTION,
     Solution,
-    Stage,
     TaskChain,
-    required_cores,
+    cores_for_work,
+)
+from repro.core.dvfs import (
+    EMPTY_FREQ_SOLUTION,
+    FreqSolution,
+    FreqStage,
+    annotate_frequency,
+    dvfs_tables,
+    extract_dvfs_solution,
+    scale_chain,
 )
 from repro.core.herad import extract_solution, herad, herad_table
 
 from .account import energy, stage_energy_terms
-from .model import DEFAULT_POWER, PowerModel
+from .model import DEFAULT_DVFS_POWER, DEFAULT_POWER, PowerModel
 
 
 @dataclasses.dataclass(frozen=True)
 class ParetoPoint:
-    """One (period, energy) operating point and the schedule achieving it."""
+    """One (period, energy) operating point and the schedule achieving it.
+
+    ``solution`` is a :class:`repro.core.Solution` for nominal-frequency
+    sweeps or a :class:`repro.core.dvfs.FreqSolution` for DVFS sweeps;
+    both expose ``core_usage()`` / ``period(chain)``. ``period`` is in the
+    chain's time unit (µs for the DVB-S2 tables), ``energy`` in watt x
+    time-unit (µJ) per frame.
+    """
 
     period: float
     energy: float
-    solution: Solution
+    solution: Solution | FreqSolution
     # (big, little) cores this point was produced under: the swept
     # sub-budget for HeRAD extractions, or the schedule's own core usage
     # for points re-optimized by the min-energy refinement pass.
@@ -112,7 +151,8 @@ def pareto_frontier(
     the exact min-energy DP (:func:`min_energy_under_period`) — the
     period-optimal schedule at a sub-budget is not necessarily the
     energy-optimal one at its own period, so refinement can only lower the
-    curve.
+    curve. All schedules run at the nominal frequency; see
+    :func:`dvfs_frontier` for the frequency-swept frontier.
     """
     points = _non_dominated(sweep_budgets(chain, b, l, power))
     if not refine:
@@ -130,7 +170,119 @@ def pareto_frontier(
     return _non_dominated(refined)
 
 
+def _resolve_levels(
+    power: PowerModel, freq_levels: tuple[float, ...] | None,
+) -> tuple[float, ...]:
+    """Normalize a frequency ladder: default to the model's, deduplicate,
+    sort ascending, reject non-positive levels. Single source for every
+    frequency-aware entry point."""
+    levels = tuple(freq_levels) if freq_levels is not None \
+        else power.freq_levels
+    if not levels or any(f <= 0 for f in levels):
+        raise ValueError("freq_levels must be positive")
+    return tuple(sorted(set(levels)))
+
+
 # ------------------------------------------------------- energy-constrained
+def min_energy_under_period_freq(
+    chain: TaskChain, b: int, l: int, p_max: float,
+    power: PowerModel = DEFAULT_DVFS_POWER,
+    freq_levels: tuple[float, ...] | None = None,
+) -> FreqSolution:
+    """Minimum-energy (schedule, per-stage DVFS level) with period <= p_max.
+
+    The exact min-sum DP of :func:`min_energy_under_period` with the
+    candidate set widened by the frequency axis: a stage [i, j] on type v
+    at level f contributes work w/f (so its minimum replica count is
+    ceil((w/f) / p_max)) and is costed with
+    ``stage_energy_terms(w/f, r, v, p_max, power, f)`` — the same single
+    source of truth the accounting report uses, so the DP's objective and
+    the reported energy cannot drift apart.
+
+    ``freq_levels`` defaults to ``power.freq_levels``; passing ``(1.0,)``
+    reproduces the nominal energad DP exactly (identical candidate
+    enumeration order and tie-breaking). Ties break on
+    (energy, big cores used, little cores used), then lowest frequency.
+    Returns EMPTY_FREQ_SOLUTION when no assignment meets the bound —
+    including ``p_max=inf``, where idle energy against the beat diverges.
+    """
+    levels = _resolve_levels(power, freq_levels)
+    if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
+        return EMPTY_FREQ_SOLUTION
+    n = chain.n
+    INF = (math.inf, math.inf, math.inf)
+    # best[j][ub][ul] = (energy, big used, little used) for tasks [0, j]
+    # using exactly ub big and ul little cores; parent[j][ub][ul] is the
+    # (stage start, cores, ctype, freq, prev ub, prev ul) reconstruction
+    # record.
+    best = [[[INF] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
+    parent: list[list[list[tuple | None]]] = [
+        [[None] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
+    for j in range(n):
+        # feasible stage candidates [i, j]:
+        # (i, r, v, f, delta_b, delta_l, cost)
+        cands: list[tuple[int, int, str, float, int, int, float]] = []
+        for i in range(j + 1):
+            rep = chain.is_rep(i, j)
+            for v in (BIG, LITTLE):
+                cap = b if v == BIG else l
+                if cap == 0:
+                    continue
+                total = chain.stage_sum(i, j, v)
+                for f in levels:
+                    work = total / f
+                    r = cores_for_work(work, p_max)
+                    if not rep:
+                        if r > 1:  # sequential stage cannot replicate
+                            continue
+                        r = 1
+                    elif r > cap:
+                        continue
+                    cost = sum(stage_energy_terms(work, r, v, p_max,
+                                                  power, f))
+                    db, dl = (r, 0) if v == BIG else (0, r)
+                    cands.append((i, r, v, f, db, dl, cost))
+        for i, r, v, f, db, dl, cost in cands:
+            if i == 0:
+                key = (cost, db, dl)
+                if key < best[j][db][dl]:
+                    best[j][db][dl] = key
+                    parent[j][db][dl] = (0, r, v, f, 0, 0)
+                continue
+            prev = best[i - 1]
+            for pb in range(b + 1 - db):
+                for pl in range(l + 1 - dl):
+                    pe = prev[pb][pl][0]
+                    if pe == math.inf:
+                        continue
+                    ub, ul = pb + db, pl + dl
+                    key = (pe + cost, ub, ul)
+                    if key < best[j][ub][ul]:
+                        best[j][ub][ul] = key
+                        parent[j][ub][ul] = (i, r, v, f, pb, pl)
+    # pick the cheapest end state
+    end = min(
+        ((best[n - 1][ub][ul], ub, ul)
+         for ub in range(b + 1) for ul in range(l + 1)),
+        key=lambda t: t[0],
+    )
+    if end[0][0] == math.inf:
+        return EMPTY_FREQ_SOLUTION
+    ub, ul = end[1], end[2]
+    stages: list[FreqStage] = []
+    j = n - 1
+    while j >= 0:
+        rec = parent[j][ub][ul]
+        assert rec is not None
+        i, r, v, f, pb, pl = rec
+        stages.append(FreqStage(i, j, r, v, f))
+        j, ub, ul = i - 1, pb, pl
+    # merging adjacent same-type same-frequency replicable stages changes
+    # neither period nor energy (both terms are additive) but saves
+    # runtime stage hops
+    return FreqSolution(tuple(reversed(stages))).merge_replicable(chain)
+
+
 def min_energy_under_period(
     chain: TaskChain, b: int, l: int, p_max: float,
     power: PowerModel = DEFAULT_POWER,
@@ -143,74 +295,17 @@ def min_energy_under_period(
     little-core preference. Returns EMPTY_SOLUTION when no schedule meets
     the bound within the budgets — including ``p_max=inf``, where idle
     energy against the beat diverges (pick a finite bound instead).
+
+    This is the nominal-frequency specialization of
+    :func:`min_energy_under_period_freq` (``freq_levels=(1.0,)``); both
+    run the identical DP, so a single-level FreqHeRAD reproduces these
+    solutions stage for stage.
     """
-    if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
+    fsol = min_energy_under_period_freq(chain, b, l, p_max, power,
+                                        freq_levels=(1.0,))
+    if fsol.is_empty():
         return EMPTY_SOLUTION
-    n = chain.n
-    INF = (math.inf, math.inf, math.inf)
-    # best[j][ub][ul] = (energy, big used, little used) for tasks [0, j]
-    # using exactly ub big and ul little cores; parent[j][ub][ul] is the
-    # (stage start, cores, ctype, prev ub, prev ul) reconstruction record.
-    best = [[[INF] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
-    parent: list[list[list[tuple | None]]] = [
-        [[None] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
-    for j in range(n):
-        # feasible stage candidates [i, j]: (i, r, v, delta_b, delta_l, cost)
-        cands: list[tuple[int, int, str, int, int, float]] = []
-        for i in range(j + 1):
-            for v in (BIG, LITTLE):
-                cap = b if v == BIG else l
-                if cap == 0:
-                    continue
-                r = required_cores(chain, i, j, v, p_max)
-                if not chain.is_rep(i, j):
-                    if r > 1:  # sequential stage cannot replicate
-                        continue
-                    r = 1
-                elif r > cap:
-                    continue
-                work = chain.stage_sum(i, j, v)
-                cost = sum(stage_energy_terms(work, r, v, p_max, power))
-                db, dl = (r, 0) if v == BIG else (0, r)
-                cands.append((i, r, v, db, dl, cost))
-        for i, r, v, db, dl, cost in cands:
-            if i == 0:
-                key = (cost, db, dl)
-                if key < best[j][db][dl]:
-                    best[j][db][dl] = key
-                    parent[j][db][dl] = (0, r, v, 0, 0)
-                continue
-            prev = best[i - 1]
-            for pb in range(b + 1 - db):
-                for pl in range(l + 1 - dl):
-                    pe = prev[pb][pl][0]
-                    if pe == math.inf:
-                        continue
-                    ub, ul = pb + db, pl + dl
-                    key = (pe + cost, ub, ul)
-                    if key < best[j][ub][ul]:
-                        best[j][ub][ul] = key
-                        parent[j][ub][ul] = (i, r, v, pb, pl)
-    # pick the cheapest end state
-    end = min(
-        ((best[n - 1][ub][ul], ub, ul)
-         for ub in range(b + 1) for ul in range(l + 1)),
-        key=lambda t: t[0],
-    )
-    if end[0][0] == math.inf:
-        return EMPTY_SOLUTION
-    ub, ul = end[1], end[2]
-    stages: list[Stage] = []
-    j = n - 1
-    while j >= 0:
-        rec = parent[j][ub][ul]
-        assert rec is not None
-        i, r, v, pb, pl = rec
-        stages.append(Stage(i, j, r, v))
-        j, ub, ul = i - 1, pb, pl
-    # merging adjacent same-type replicable stages changes neither period
-    # nor energy (both terms are additive) but saves runtime stage hops
-    return Solution(tuple(reversed(stages))).merge_replicable(chain)
+    return fsol.to_solution()
 
 
 def energad(
@@ -223,7 +318,8 @@ def energad(
     With ``p_max=None`` the bound defaults to the optimal achievable
     period (HeRAD's optimum), i.e. "cheapest schedule that is still
     throughput-optimal". This is the entry registered in
-    ``repro.core.STRATEGIES`` as ``"energad"``.
+    ``repro.core.STRATEGIES`` as ``"energad"``. Periods are in the chain's
+    time unit (µs for the DVB-S2 tables).
     """
     if b + l <= 0:
         return EMPTY_SOLUTION
@@ -233,3 +329,115 @@ def energad(
             return EMPTY_SOLUTION
         p_max = ref.period(chain)
     return min_energy_under_period(chain, b, l, p_max, power)
+
+
+# --------------------------------------------------------------- FreqHeRAD
+def freqherad(
+    chain: TaskChain, b: int, l: int,
+    power: PowerModel | None = None,
+    p_max: float | None = None,
+    freq_levels: tuple[float, ...] | None = None,
+) -> FreqSolution:
+    """DVFS-aware HeRAD: per-stage (core type, replicas, frequency level),
+    lexicographically optimizing (period, energy).
+
+    With ``p_max=None`` the bound is the minimum achievable period over
+    ALL frequency assignments. Latency is monotone in f, so that optimum
+    is attained with every stage at the highest level — i.e. plain HeRAD
+    on the 1/f_max-scaled chain (``repro.core.dvfs.scale_chain``), reusing
+    the vectorized ``herad_table`` machinery. The min-energy DP with the
+    frequency axis (:func:`min_energy_under_period_freq`) then spends any
+    per-stage slack on downclocking: a stage whose weight sits below the
+    period bound can drop to a lower level (dynamic energy scales f**2 per
+    unit work) as long as its replica count still fits the budget.
+
+    ``power`` defaults to :data:`repro.energy.model.DEFAULT_DVFS_POWER`;
+    ``freq_levels`` to ``power.freq_levels``. At ``freq_levels=(1.0,)``
+    this degenerates to ``energad`` exactly. Registered in
+    ``repro.core.STRATEGIES`` as ``"freqherad"``. Returns a
+    :class:`repro.core.dvfs.FreqSolution`; periods in the chain's time
+    unit (µs), energies costed in watt x time-unit (µJ).
+    """
+    if power is None:
+        power = DEFAULT_DVFS_POWER
+    levels = _resolve_levels(power, freq_levels)
+    if b + l <= 0:
+        return EMPTY_FREQ_SOLUTION
+    if p_max is None:
+        fmax = levels[-1]
+        ref = herad(scale_chain(chain, fmax, fmax), b, l)
+        if ref.is_empty():
+            return EMPTY_FREQ_SOLUTION
+        # period via the FreqSolution weight formula so the bound and the
+        # DP's feasibility checks use consistent arithmetic
+        p_max = annotate_frequency(ref, fmax, fmax).period(chain)
+    return min_energy_under_period_freq(chain, b, l, p_max, power, levels)
+
+
+def sweep_budgets_freq(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    freq_levels: tuple[float, ...] | None = None,
+) -> list[ParetoPoint]:
+    """All (sub-budget x frequency-profile) HeRAD optima with energies.
+
+    The frequency axis of the Pareto enumeration: for every global
+    per-core-type profile (f_big, f_little) on the level grid, one
+    vectorized HeRAD table over the 1/f-scaled chain
+    (``repro.core.dvfs.dvfs_tables``) yields the period-optimal schedule
+    of every sub-budget (b', l') <= (b, l). Points carry
+    :class:`~repro.core.dvfs.FreqSolution` schedules annotated with the
+    profile, costed at their own achieved period; sorted by
+    (period, energy).
+    """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables = dvfs_tables(chain, b, l, _resolve_levels(power, freq_levels))
+    points: list[ParetoPoint] = []
+    for profile in tables:
+        for bb in range(b + 1):
+            for ll in range(l + 1):
+                if bb + ll == 0:
+                    continue
+                fsol = extract_dvfs_solution(tables, profile, bb, ll)
+                if fsol.is_empty():
+                    continue
+                p = fsol.period(chain)
+                points.append(
+                    ParetoPoint(p, energy(chain, fsol, power), fsol,
+                                (bb, ll)))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
+def dvfs_frontier(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    freq_levels: tuple[float, ...] | None = None,
+    refine: bool = True,
+) -> list[ParetoPoint]:
+    """The (period, energy) frontier with frequency as a third sweep axis.
+
+    Like :func:`pareto_frontier` but enumerating
+    (b', l', f_big, f_little) via :func:`sweep_budgets_freq`; with
+    ``refine=True`` each surviving period level is re-optimized by the
+    exact per-stage-frequency DP (:func:`min_energy_under_period_freq`),
+    which can mix levels within one schedule and therefore only lowers
+    the curve. Every point of the nominal frontier is weakly dominated by
+    this one; on platforms with real DVFS headroom the domination is
+    strict (see examples/dvfs_frontier.py).
+    """
+    points = _non_dominated(
+        sweep_budgets_freq(chain, b, l, power, freq_levels))
+    if not refine:
+        return points
+    refined: list[ParetoPoint] = []
+    for pt in points:
+        fsol = min_energy_under_period_freq(chain, b, l, pt.period, power,
+                                            freq_levels)
+        if fsol.is_empty():
+            refined.append(pt)
+            continue
+        e = energy(chain, fsol, power, period=pt.period)
+        refined.append(
+            ParetoPoint(pt.period, e, fsol, fsol.core_usage())
+            if e < pt.energy else pt)
+    return _non_dominated(refined)

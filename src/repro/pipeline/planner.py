@@ -24,7 +24,14 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core import BIG, LITTLE, STRATEGIES, Solution, TaskChain
+from repro.core import (
+    BIG,
+    LITTLE,
+    STRATEGIES,
+    FreqSolution,
+    Solution,
+    TaskChain,
+)
 from repro.models.config import ModelConfig
 
 
@@ -124,22 +131,31 @@ class PipelinePlan:
     chain: TaskChain
     period_us: float
     tokens_per_step: int
+    # set by the DVFS-aware "freqherad" strategy: the same stages as
+    # ``solution`` but annotated with per-stage frequency levels
+    freq_solution: FreqSolution | None = None
 
     def throughput_tokens_per_s(self) -> float:
         return self.tokens_per_step / (self.period_us * 1e-6)
 
     def stage_table(self) -> list[dict]:
+        """One dict per stage; DVFS plans add a ``freq`` column."""
         rows = []
-        for st in self.solution.stages:
-            rows.append({
+        freq_stages = self.freq_solution.stages if self.freq_solution \
+            else (None,) * len(self.solution.stages)
+        for st, fst in zip(self.solution.stages, freq_stages):
+            weight = self.chain.weight(st.start, st.end, st.cores, st.ctype)
+            row = {
                 "tasks": [self.chain.names[i]
                           for i in range(st.start, st.end + 1)],
                 "n_tasks": st.n_tasks(),
                 "devices": st.cores,
                 "class": "big" if st.ctype == BIG else "little",
-                "weight_us": self.chain.weight(st.start, st.end, st.cores,
-                                               st.ctype),
-            })
+                "weight_us": weight if fst is None else weight / fst.freq,
+            }
+            if fst is not None:
+                row["freq"] = fst.freq
+            rows.append(row)
         return rows
 
     def energy_proxy_watts(self, system: HeterogeneousSystem) -> float:
@@ -154,7 +170,10 @@ class PipelinePlan:
         ``power`` defaults to a model derived from the device classes'
         ``watts`` fields (``idle_fraction`` of the draw attributed to
         static/idle power). Chain weights are µs, so energies are µJ per
-        pipeline step; ``report.avg_watts`` is directly in watts.
+        pipeline step; ``report.avg_watts`` is directly in watts. DVFS
+        plans (``freq_solution`` set) are costed at their per-stage
+        frequency levels — each ``StageEnergy.stage.freq`` in the report
+        shows the level the stage runs at.
         """
         from repro.energy.account import energy_report
         from repro.energy.model import PowerModel
@@ -162,7 +181,8 @@ class PipelinePlan:
         if power is None:
             power = PowerModel.from_device_classes(
                 system, idle_fraction=idle_fraction)
-        return energy_report(self.chain, self.solution, power)
+        return energy_report(self.chain,
+                             self.freq_solution or self.solution, power)
 
 
 def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
@@ -175,6 +195,15 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
     minimize under; it defaults to one derived from the device classes'
     ``watts`` fields — the same model ``PipelinePlan.energy_report`` scores
     with, so the planner optimizes what the report measures.
+
+    ``strategy="freqherad"`` additionally picks a per-stage DVFS level
+    (the frequency plan): the plan's ``freq_solution`` carries the
+    annotated stages, ``stage_table()`` gains a ``freq`` column, and
+    ``energy_report`` costs each stage at its level. The default ladder
+    is ``repro.energy.model.DEFAULT_DVFS_POWER.freq_levels``; pass a
+    ``power`` with custom ``freq_levels`` to override. The plan's period
+    equals nominal HeRAD's optimum (top level = 1.0), so DVFS only
+    spends slack, never throughput.
     """
     chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
                            system=system)
@@ -186,6 +215,24 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
             power = PowerModel.from_device_classes(system)
         sol = energad(chain, system.big.count, system.little.count,
                       power=power)
+    elif strategy == "freqherad":
+        from repro.energy.model import DEFAULT_DVFS_POWER, PowerModel
+        from repro.energy.pareto import freqherad
+
+        if power is None:
+            # device classes carry only a busy-watts figure; the DVFS
+            # ladder comes from the energy layer's default model so the
+            # planner and the strategy's own fallback can never disagree
+            power = PowerModel.from_device_classes(
+                system, freq_levels=DEFAULT_DVFS_POWER.freq_levels)
+        fsol = freqherad(chain, system.big.count, system.little.count,
+                         power=power)
+        if fsol.is_empty():
+            raise ValueError(
+                f"no feasible schedule for {cfg.name} on "
+                f"b={system.big.count}, l={system.little.count}")
+        return PipelinePlan(fsol.to_solution(), chain, fsol.period(chain),
+                            tokens_per_step, freq_solution=fsol)
     else:
         sol = STRATEGIES[strategy](chain, system.big.count,
                                    system.little.count)

@@ -1,0 +1,58 @@
+"""Documentation suite: required files exist, internal links resolve,
+and the README agrees with the code on the strategy registry.
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load_link_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_doc_links", ROOT / "tools" / "check_doc_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_documentation_files_exist():
+    for rel in ("README.md", "docs/scheduling.md", "docs/architecture.md",
+                "docs/energy.md"):
+        assert (ROOT / rel).is_file(), f"missing {rel}"
+
+
+def test_internal_links_resolve():
+    checker = _load_link_checker()
+    broken = checker.check_links(ROOT)
+    assert broken == [], f"broken doc links: {broken}"
+
+
+def test_link_checker_cli_passes():
+    import subprocess
+
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_doc_links.py"),
+         str(ROOT)],
+        capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_link_checker_detects_breakage(tmp_path):
+    checker = _load_link_checker()
+    (tmp_path / "README.md").write_text(
+        "see [missing](docs/nope.md) and [ok](#anchor) and "
+        "[ext](https://example.com)")
+    broken = checker.check_links(tmp_path)
+    assert broken == ["README.md: docs/nope.md"]
+
+
+def test_readme_documents_every_strategy():
+    from repro.core import STRATEGIES
+
+    readme = (ROOT / "README.md").read_text(encoding="utf-8")
+    for name in ("herad", "fertac", "twocatac", "energad", "freqherad"):
+        assert name in STRATEGIES
+        assert name in readme, f"README does not mention strategy {name}"
+    # the tier-1 command is documented
+    assert 'pytest' in readme

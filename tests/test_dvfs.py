@@ -1,0 +1,463 @@
+"""DVFS-aware scheduling (FreqHeRAD) and the frequency-swept frontier.
+
+Covers the invariants promised by repro.core.dvfs + repro.energy.pareto:
+  - freqherad is certified optimal against a brute-force oracle over
+    (decomposition x core types x replica counts x frequency levels) on
+    small chains (lexicographic (period, energy));
+  - at freq_levels=(1.0,) FreqHeRAD exactly reproduces nominal solutions
+    (period = HeRAD's optimum, stages = energad's, property-tested);
+  - PowerModel.scale_chain edge cases (tiny f, single-level models,
+    nominal no-op, invalid frequencies);
+  - frequency-annotated accounting matches the DP objective;
+  - the DVFS frontier is strictly monotone and dominates the nominal one;
+  - planner / benchmark wiring (freq plan column, graceful table2 skip).
+"""
+import math
+from itertools import combinations, product
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs.dvbs2 import RESOURCES, dvbs2_chain, platform_power
+from repro.core import (
+    BIG,
+    LITTLE,
+    STRATEGIES,
+    EMPTY_FREQ_SOLUTION,
+    FreqSolution,
+    FreqStage,
+    annotate_frequency,
+    dvfs_tables,
+    extract_dvfs_solution,
+    herad,
+    make_chain,
+    scale_chain,
+)
+from repro.energy import (
+    DEFAULT_DVFS_POWER,
+    DEFAULT_POWER,
+    CoreTypePower,
+    PowerModel,
+    dvfs_frontier,
+    energad,
+    energy,
+    energy_report,
+    freqherad,
+    min_energy_under_period_freq,
+    pareto_frontier,
+)
+
+LEVELS3 = (0.6, 0.8, 1.0)
+DVFS3 = PowerModel("test-dvfs", DEFAULT_POWER.big, DEFAULT_POWER.little,
+                   freq_levels=LEVELS3)
+
+
+def _chain(seed=0, n=10, sr=0.5):
+    return make_chain(np.random.default_rng(seed), n, sr)
+
+
+# ------------------------------------------------------------- scale_chain
+def test_scale_chain_nominal_is_identity_object():
+    ch = _chain()
+    assert scale_chain(ch) is ch
+    assert DEFAULT_POWER.scale_chain(ch) is ch  # method delegates
+
+
+def test_scale_chain_small_frequency_stays_valid():
+    ch = _chain(1)
+    tiny = scale_chain(ch, f_big=1e-6, f_little=1e-3)
+    # weights blow up as 1/f but remain positive and finite
+    assert np.isfinite(tiny.w[BIG]).all() and (tiny.w[BIG] > 0).all()
+    np.testing.assert_allclose(tiny.w[BIG], ch.w[BIG] * 1e6)
+    np.testing.assert_allclose(tiny.w[LITTLE], ch.w[LITTLE] * 1e3)
+    # structure is preserved
+    assert tiny.n == ch.n and tiny.names == ch.names
+    np.testing.assert_array_equal(tiny.replicable, ch.replicable)
+
+
+def test_scale_chain_rejects_non_positive_frequencies():
+    ch = _chain(2)
+    for bad in (0.0, -1.0):
+        with pytest.raises(ValueError):
+            scale_chain(ch, f_big=bad)
+        with pytest.raises(ValueError):
+            scale_chain(ch, f_little=bad)
+
+
+def test_single_level_model_scale_and_dp_degenerate():
+    pm = PowerModel("one-level", CoreTypePower(0.1, 0.9),
+                    CoreTypePower(0.03, 0.32), freq_levels=(1.0,))
+    ch = _chain(3, n=7)
+    assert pm.scale_chain(ch) is ch
+    p_opt = herad(ch, 2, 2).period(ch)
+    fsol = freqherad(ch, 2, 2, power=pm)
+    assert fsol.is_nominal()
+    assert fsol.period(ch) == pytest.approx(p_opt)
+
+
+# ----------------------------------------------------------- FreqSolution
+def test_freq_solution_period_and_conversion():
+    ch = _chain(4, n=6, sr=1.0)  # fully replicable
+    sol = herad(ch, 2, 2)
+    fsol = annotate_frequency(sol, f_big=0.5, f_little=1.0)
+    # big stages take 2x longer at half frequency
+    for st_, fst in zip(sol.stages, fsol.stages):
+        scale = 2.0 if st_.ctype == BIG else 1.0
+        assert fst.weight(ch) == pytest.approx(
+            ch.weight(st_.start, st_.end, st_.cores, st_.ctype) * scale)
+    assert fsol.covers(ch)
+    assert fsol.core_usage() == sol.core_usage()
+    assert fsol.to_solution() == sol
+    assert not fsol.is_nominal()
+    assert annotate_frequency(sol).is_nominal()
+    assert EMPTY_FREQ_SOLUTION.period(ch) == math.inf
+
+
+def test_freq_merge_requires_matching_level():
+    ch = _chain(5, n=4, sr=1.0)
+    same = FreqSolution((FreqStage(0, 1, 1, BIG, 0.8),
+                         FreqStage(2, 3, 2, BIG, 0.8)))
+    mixed = FreqSolution((FreqStage(0, 1, 1, BIG, 0.8),
+                          FreqStage(2, 3, 2, BIG, 1.0)))
+    assert len(same.merge_replicable(ch).stages) == 1
+    assert len(mixed.merge_replicable(ch).stages) == 2  # levels differ
+
+
+def test_dvfs_tables_match_direct_herad_on_scaled_chains():
+    ch = _chain(6, n=8, sr=0.6)
+    tables = dvfs_tables(ch, 3, 2, LEVELS3)
+    assert set(tables) == set(product(LEVELS3, LEVELS3))
+    for (fb, fl) in ((0.6, 1.0), (1.0, 0.6), (0.8, 0.8)):
+        fsol = extract_dvfs_solution(tables, (fb, fl), 3, 2)
+        direct = herad(scale_chain(ch, fb, fl), 3, 2)
+        assert fsol.period(ch) == pytest.approx(
+            direct.period(scale_chain(ch, fb, fl)))
+        for st_ in fsol.stages:
+            assert st_.freq == (fb if st_.ctype == BIG else fl)
+
+
+# ----------------------------------------------- brute-force certification
+def _brute_freq(chain, b, l, levels, power):
+    """Exhaustive lexicographic (period, energy) oracle.
+
+    Enumerates every interval partition, per-stage core type, replica
+    count and frequency level; returns (best period P*, min energy among
+    configurations with period <= P*, costed at operating period P*).
+    """
+    n = chain.n
+    configs = []  # (period, energy at own period is wrong — cost later)
+    assignments = []
+    for k in range(n):
+        for cuts in combinations(range(1, n), k):
+            bounds = [0, *cuts, n]
+            ivs = [(bounds[i], bounds[i + 1] - 1)
+                   for i in range(len(bounds) - 1)]
+
+            def rec(si, rb, rl, acc):
+                if si == len(ivs):
+                    assignments.append(tuple(acc))
+                    return
+                s, e = ivs[si]
+                rep = chain.is_rep(s, e)
+                for v, budget in ((BIG, rb), (LITTLE, rl)):
+                    max_u = budget if rep else min(1, budget)
+                    for u in range(1, max_u + 1):
+                        for f in levels:
+                            acc.append((s, e, u, v, f))
+                            rec(si + 1, rb - u if v == BIG else rb,
+                                rl - u if v == LITTLE else rl, acc)
+                            acc.pop()
+
+            rec(0, b, l, [])
+    assert assignments, "oracle found no feasible configuration"
+
+    def period_of(cfg):
+        return max((chain.stage_sum(s, e, v) / f) / u
+                   for (s, e, u, v, f) in cfg)
+
+    p_star = min(period_of(cfg) for cfg in assignments)
+    best_e = math.inf
+    for cfg in assignments:
+        if period_of(cfg) > p_star * (1 + 1e-12):
+            continue
+        e_tot = 0.0
+        for (s, e, u, v, f) in cfg:
+            work = chain.stage_sum(s, e, v) / f
+            e_tot += work * power.busy_watts(v, f) \
+                + max(u * p_star - work, 0.0) * power.idle_watts(v)
+        best_e = min(best_e, e_tot)
+    return p_star, best_e
+
+
+@pytest.mark.parametrize("trial", range(10))
+def test_freqherad_matches_brute_force(trial):
+    """Acceptance: FreqHeRAD optimality on n <= 5, <= 3 freq levels."""
+    rng = np.random.default_rng(500 + trial)
+    n = int(rng.integers(2, 6))
+    ch = make_chain(np.random.default_rng(trial), n, float(rng.uniform(0, 1)))
+    b, l = int(rng.integers(0, 4)), int(rng.integers(0, 4))
+    if b + l == 0:
+        l = 2
+    levels = LEVELS3 if trial % 2 else (0.5, 1.0)
+    power = PowerModel("t", DEFAULT_POWER.big, DEFAULT_POWER.little,
+                       freq_levels=levels)
+    p_star, e_star = _brute_freq(ch, b, l, levels, power)
+    fsol = freqherad(ch, b, l, power=power)
+    assert not fsol.is_empty()
+    assert fsol.covers(ch)
+    # lexicographic first key: the minimum achievable period
+    assert fsol.period(ch) <= p_star * (1 + 1e-9)
+    # second key: minimum energy among period-optimal assignments
+    e = energy(ch, fsol, power, period=p_star)
+    assert e == pytest.approx(e_star, rel=1e-9)
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_freq_dp_relaxed_bound_matches_oracle(trial):
+    """min_energy_under_period_freq is exact at non-optimal bounds too."""
+    rng = np.random.default_rng(900 + trial)
+    n = int(rng.integers(2, 6))
+    ch = make_chain(np.random.default_rng(50 + trial), n,
+                    float(rng.uniform(0, 1)))
+    b, l = 2, 2
+    levels = (0.5, 1.0)
+    power = PowerModel("t", DEFAULT_POWER.big, DEFAULT_POWER.little,
+                       freq_levels=levels)
+    p_max = herad(ch, b, l).period(ch) * float(rng.uniform(1.2, 2.5))
+    fsol = min_energy_under_period_freq(ch, b, l, p_max, power, levels)
+    assert not fsol.is_empty()
+    # oracle: exhaustive min energy under the relaxed bound
+    best = math.inf
+    n_ = ch.n
+    for k in range(n_):
+        for cuts in combinations(range(1, n_), k):
+            bounds = [0, *cuts, n_]
+            ivs = [(bounds[i], bounds[i + 1] - 1)
+                   for i in range(len(bounds) - 1)]
+
+            def rec(si, rb, rl, acc):
+                nonlocal best
+                if si == len(ivs):
+                    best = min(best, acc)
+                    return
+                s, e = ivs[si]
+                rep = ch.is_rep(s, e)
+                for v, budget in ((BIG, rb), (LITTLE, rl)):
+                    max_u = budget if rep else min(1, budget)
+                    for u in range(1, max_u + 1):
+                        for f in levels:
+                            work = ch.stage_sum(s, e, v) / f
+                            if work / u > p_max * (1 + 1e-12):
+                                continue
+                            cost = work * power.busy_watts(v, f) \
+                                + max(u * p_max - work, 0.0) \
+                                * power.idle_watts(v)
+                            rec(si + 1, rb - u if v == BIG else rb,
+                                rl - u if v == LITTLE else rl, acc + cost)
+
+            rec(0, b, l, 0.0)
+    assert energy(ch, fsol, power, period=p_max) == pytest.approx(
+        best, rel=1e-9)
+
+
+# ------------------------------------ nominal degeneration (property test)
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 10),
+       sr=st.floats(0.0, 1.0), b=st.integers(0, 3), l=st.integers(0, 3))
+def test_freqherad_single_level_reproduces_nominal_herad(seed, n, sr, b, l):
+    """Acceptance: FreqHeRAD at freq_levels=(1.0,) == nominal HeRAD."""
+    if b + l == 0:
+        b = 1
+    ch = make_chain(np.random.default_rng(seed), n, sr)
+    fsol = freqherad(ch, b, l, power=DEFAULT_POWER, freq_levels=(1.0,))
+    ref = herad(ch, b, l)
+    assert not fsol.is_empty()
+    assert fsol.is_nominal()
+    assert fsol.covers(ch)
+    # the period is HeRAD's optimum...
+    assert fsol.period(ch) == pytest.approx(ref.period(ch), rel=1e-12)
+    # ...and the stages are exactly energad's (identical DP + tie-breaks)
+    nominal = energad(ch, b, l, power=DEFAULT_POWER)
+    assert fsol.to_solution() == nominal
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_freqherad_single_level_reproduces_nominal_parametrized(seed):
+    """Hypothesis-free variant of the property above (always runs)."""
+    rng = np.random.default_rng(3000 + seed)
+    ch = make_chain(rng, int(rng.integers(2, 11)), float(rng.uniform(0, 1)))
+    b, l = int(rng.integers(0, 4)), int(rng.integers(1, 4))
+    fsol = freqherad(ch, b, l, power=DEFAULT_POWER, freq_levels=(1.0,))
+    assert fsol.is_nominal()
+    assert fsol.period(ch) == pytest.approx(herad(ch, b, l).period(ch),
+                                            rel=1e-12)
+    assert fsol.to_solution() == energad(ch, b, l, power=DEFAULT_POWER)
+
+
+def test_freqherad_single_level_on_dvbs2_matches_energad():
+    ch = dvbs2_chain("mac")
+    power = platform_power("mac")
+    b, l = RESOURCES["mac"]["half"]
+    one_level = PowerModel("nom", power.big, power.little, freq_levels=(1.0,))
+    fsol = freqherad(ch, b, l, power=one_level)
+    assert fsol.to_solution() == energad(ch, b, l, power=one_level)
+    assert fsol.period(ch) == pytest.approx(herad(ch, b, l).period(ch))
+
+
+# -------------------------------------------------------------- invariants
+def test_more_levels_never_cost_more_energy():
+    ch = _chain(8, n=9, sr=0.5)
+    p_max = herad(ch, 3, 2).period(ch) * 1.5
+    prev = math.inf
+    for levels in ((1.0,), (0.8, 1.0), (0.6, 0.8, 1.0)):
+        fsol = min_energy_under_period_freq(ch, 3, 2, p_max, DEFAULT_POWER,
+                                            levels)
+        e = energy(ch, fsol, DEFAULT_POWER, period=p_max)
+        assert e <= prev + 1e-9
+        prev = e
+
+
+def test_freqherad_period_equals_nominal_optimum_when_top_level_is_one():
+    # top level 1.0 => the lexicographic first key is HeRAD's optimum:
+    # DVFS spends slack but never throughput
+    for seed in range(4):
+        ch = _chain(seed, n=8)
+        fsol = freqherad(ch, 2, 2, power=DVFS3)
+        assert fsol.period(ch) <= herad(ch, 2, 2).period(ch) * (1 + 1e-9)
+
+
+def test_freq_account_matches_dp_objective():
+    ch = dvbs2_chain("mac")
+    power = platform_power("mac")
+    b, l = RESOURCES["mac"]["half"]
+    p_max = herad(ch, b, l).period(ch)
+    fsol = freqherad(ch, b, l, power=power)
+    rep = energy_report(ch, fsol, power, period=p_max)
+    # per-stage terms recompute exactly from the solution's annotations
+    from repro.energy.account import stage_energy_terms
+    for se in rep.stages:
+        st_ = se.stage
+        work = ch.stage_sum(st_.start, st_.end, st_.ctype) / st_.freq
+        busy, idle = stage_energy_terms(work, st_.cores, st_.ctype, p_max,
+                                        power, st_.freq)
+        assert se.busy == pytest.approx(busy)
+        assert se.idle == pytest.approx(idle)
+        assert 0.0 <= se.utilization <= 1.0
+    assert rep.total == pytest.approx(sum(s.total for s in rep.stages))
+
+
+def test_freq_account_rejects_global_freq_knobs():
+    ch = _chain(9, n=6)
+    fsol = freqherad(ch, 2, 2, power=DVFS3)
+    with pytest.raises(ValueError):
+        energy_report(ch, fsol, DVFS3, f_big=0.8)
+
+
+def test_freqherad_zero_budget_and_registry():
+    ch = _chain(10, n=5)
+    assert freqherad(ch, 0, 0).is_empty()
+    assert min_energy_under_period_freq(
+        ch, 2, 2, math.inf, DVFS3).is_empty()
+    assert "freqherad" in STRATEGIES
+    fsol = STRATEGIES["freqherad"](ch, 2, 2)
+    assert isinstance(fsol, FreqSolution)
+    assert fsol.covers(ch)
+    assert fsol.period(ch) <= herad(ch, 2, 2).period(ch) * (1 + 1e-9)
+    assert DEFAULT_DVFS_POWER.freq_levels == (0.5, 0.75, 1.0)
+
+
+# ---------------------------------------------------------- dvfs frontier
+def test_dvfs_frontier_monotone_and_dominates_nominal():
+    ch = dvbs2_chain("mac")
+    power = platform_power("mac")
+    b, l = RESOURCES["mac"]["half"]
+    nominal = pareto_frontier(ch, b, l, power)
+    dvfs = dvfs_frontier(ch, b, l, power)
+    assert dvfs
+    for prev, nxt in zip(dvfs, dvfs[1:]):
+        assert nxt.period > prev.period
+        assert nxt.energy < prev.energy
+    for pt in dvfs:
+        assert pt.solution.covers(ch)
+        assert pt.solution.cores_used(BIG) <= b
+        assert pt.solution.cores_used(LITTLE) <= l
+        assert pt.solution.period(ch) <= pt.period * (1 + 1e-9)
+    # acceptance: at least one DVFS point strictly dominates the nominal
+    # frontier (<= period, strictly less energy)
+    assert any(
+        pt.period <= nom.period + 1e-9 and pt.energy < nom.energy - 1e-9
+        for pt in dvfs for nom in nominal)
+
+
+def test_dvfs_frontier_weakly_dominates_every_nominal_point():
+    ch = _chain(12, n=10, sr=0.6)
+    nominal = pareto_frontier(ch, 3, 2, DVFS3)
+    dvfs = dvfs_frontier(ch, 3, 2, DVFS3)
+    for nom in nominal:
+        assert any(pt.period <= nom.period * (1 + 1e-9)
+                   and pt.energy <= nom.energy * (1 + 1e-9)
+                   for pt in dvfs)
+
+
+def test_dvfs_frontier_zero_budget_contract():
+    ch = _chain(13, n=5)
+    assert dvfs_frontier(ch, 0, 0, DVFS3) == []
+
+
+# --------------------------------------------------------------- planner
+def test_planner_freqherad_plan():
+    from repro.models.config import get_smoke_config
+    from repro.pipeline import HeterogeneousSystem, plan_pipeline
+
+    system = HeterogeneousSystem.default(4, 4)
+    nominal = plan_pipeline(get_smoke_config("gemma3-1b"), system=system,
+                            tokens_per_step=64)
+    plan = plan_pipeline(get_smoke_config("gemma3-1b"), system=system,
+                         tokens_per_step=64, strategy="freqherad")
+    assert plan.freq_solution is not None
+    assert plan.freq_solution.covers(plan.chain)
+    # top level 1.0: DVFS never worsens the period
+    assert plan.period_us <= nominal.period_us * (1 + 1e-9)
+    rows = plan.stage_table()
+    assert all("freq" in r for r in rows)
+    # the energy report costs per-stage levels and never beats nominal's
+    # energy upward at the shared operating period
+    from repro.energy.model import PowerModel as PM
+    pm = PM.from_device_classes(system,
+                                freq_levels=DEFAULT_DVFS_POWER.freq_levels)
+    p = max(plan.period_us, nominal.period_us)
+    assert (energy(plan.chain, plan.freq_solution, pm, period=p)
+            <= energy(nominal.chain, nominal.solution, pm, period=p) + 1e-9)
+    rep = plan.energy_report(system)
+    assert rep.total > 0
+
+
+# ------------------------------------------------------------ benchmarks
+def test_table2_skips_raising_and_infeasible_strategies(capsys):
+    import importlib.util
+    from pathlib import Path
+
+    spec = importlib.util.spec_from_file_location(
+        "bench_run", Path(__file__).resolve().parents[1]
+        / "benchmarks" / "run.py")
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+
+    def boom(ch, b, l):
+        raise RuntimeError("infeasible (b, l) combination")
+
+    from repro.core import EMPTY_SOLUTION
+
+    bench.table2(strategies={
+        "boom": boom,
+        "empty": lambda ch, b, l: EMPTY_SOLUTION,
+        "herad": lambda ch, b, l: herad(ch, b, l),
+    })
+    out = capsys.readouterr().out
+    # the failing strategies are skipped with comment rows...
+    assert "boom,skipped: infeasible" in out
+    assert "empty,skipped:" in out
+    # ...while the healthy strategy still produces its data rows
+    assert "table2,mac,(16B;4L),herad," in out
+    assert "table2,x7,(6B;8L),herad," in out

@@ -1,0 +1,63 @@
+"""Check that internal links in README.md / docs/ resolve.
+
+Scans markdown files for inline links and images (``[text](target)``),
+skips external schemes (http/https/mailto) and pure in-page anchors, and
+verifies that every relative target exists on disk (anchors are stripped
+before the existence check). Exits non-zero listing the broken links —
+used by the CI docs job and tests/test_docs.py.
+
+  python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline markdown link/image; excludes autolinks and reference-style defs
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_markdown(root: Path):
+    """Top-level *.md plus everything under docs/ (the documented tree)."""
+    yield from sorted(root.glob("*.md"))
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.rglob("*.md"))
+
+
+def check_links(root: Path) -> list[str]:
+    """Returns 'file: target' strings for every broken relative link."""
+    broken: list[str] = []
+    for md in iter_markdown(root):
+        text = md.read_text(encoding="utf-8")
+        for match in _LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}: {target}")
+    return broken
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 \
+        else Path(__file__).resolve().parents[1]
+    broken = check_links(root)
+    checked = sum(1 for _ in iter_markdown(root))
+    if broken:
+        print(f"BROKEN LINKS ({len(broken)}):")
+        for line in broken:
+            print(f"  {line}")
+        return 1
+    print(f"ok: all relative links resolve across {checked} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
