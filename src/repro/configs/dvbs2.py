@@ -107,3 +107,50 @@ def throughput_mbps(period_us: float, platform: str) -> float:
     """Information throughput in Mb/s for a given period (µs)."""
     frames_per_s = 1e6 / period_us * INTERFRAME[platform]
     return frames_per_s * K_INFO_BITS / 1e6
+
+
+def budget_presets(platform: str, resources: str = "half",
+                   horizon_s: float = 9.0) -> dict:
+    """Scenario power budgets sized from the platform's own frontier.
+
+    For the governor scenarios (repro.control) the interesting caps are
+    relative: between two frontier points a cap forces a specific re-plan,
+    below the frugalest point it is infeasible. These presets compute the
+    (period, energy) frontier of the chosen platform/resources and place
+    caps at its high / mid / low watt levels (with a few % headroom so the
+    pinned plan is admissible):
+
+      - ``"constant"``: the high cap — steady state, no trigger;
+      - ``"battery"``:  drain-to-empty over ``horizon_s`` seconds stepping
+        high → mid → low as the charge falls (>= 2 forced re-plans);
+      - ``"thermal"``:  high → mid at ``horizon_s/3``, recovering at
+        ``2 * horizon_s / 3``.
+
+    Returns ``{"constant", "battery", "thermal"}`` plus ``"_levels"``,
+    the (hi, mid, low) watt triple the traces were built from.
+    """
+    from repro.control.budget import (
+        BatteryBudget,
+        ConstantBudget,
+        ThermalThrottleBudget,
+    )
+    from repro.energy.pareto import pareto_frontier
+
+    chain = dvbs2_chain(platform)
+    power = platform_power(platform)
+    b, l = RESOURCES[platform][resources]
+    front = pareto_frontier(chain, b, l, power)
+    watts = [pt.energy / pt.period for pt in front]
+    hi = watts[0] * 1.05
+    mid = watts[min(len(watts) - 1, len(watts) // 3)] * 1.02
+    low = watts[min(len(watts) - 1, 2 * len(watts) // 3)] * 1.02
+    return {
+        "constant": ConstantBudget(hi),
+        "battery": BatteryBudget(
+            capacity_j=hi * horizon_s, drain_w=hi,
+            levels=((0.65, hi), (0.35, mid), (0.0, low))),
+        "thermal": ThermalThrottleBudget(
+            nominal_w=hi, throttled_w=mid,
+            t_throttle=horizon_s / 3.0, t_recover=2.0 * horizon_s / 3.0),
+        "_levels": (hi, mid, low),
+    }

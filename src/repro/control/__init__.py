@@ -1,0 +1,49 @@
+"""Adaptive runtime control: the closed loop between measurement and plan.
+
+Sits between ``repro.pipeline.runtime`` (what actually runs) and
+``repro.energy.pareto`` (what could run): the paper's schedulers choose a
+static (type, replicas, frequency) plan offline from an assumed power
+model; this subsystem keeps that choice honest online.
+
+  - :mod:`repro.control.budget`    — time-varying power caps P_max(t):
+    constant, scripted, battery drain-to-empty, thermal throttle steps;
+  - :mod:`repro.control.calibrate` — least-squares fitting of PowerModel
+    busy/idle watts from measured busy-seconds/energy traces (the
+    ROADMAP's measured-power item);
+  - :mod:`repro.control.governor`  — the Governor: monitors measured
+    period/power, and on cap change, prediction drift, or device loss
+    re-plans off the (period, energy) Pareto frontier under the current
+    cap (``repro.energy.pareto.min_period_under_power``) and swaps the
+    schedule in via ``runtime.rebuild``;
+  - :mod:`repro.control.sim`       — the scenario harness driving all of
+    it end to end on a sleep-simulated runtime (examples, benchmarks and
+    acceptance tests share it).
+
+See docs/control.md for the governor state machine and trace formats.
+"""
+from .budget import (  # noqa: F401
+    BatteryBudget,
+    ConstantBudget,
+    PowerBudget,
+    ScriptedBudget,
+    ThermalThrottleBudget,
+)
+from .calibrate import (  # noqa: F401
+    TraceSample,
+    fit_power_model,
+    fit_report,
+    sample_from_run,
+    synthesize_samples,
+)
+from .governor import (  # noqa: F401
+    ActivePlan,
+    Governor,
+    GovernorEvent,
+    Observation,
+)
+from .sim import (  # noqa: F401
+    ScenarioResult,
+    WindowRecord,
+    run_scenario,
+    sleep_stage_builder,
+)

@@ -1,0 +1,182 @@
+"""Time-varying power budgets P_max(t) for the runtime governor.
+
+The paper's energy-aware schedules assume one fixed power envelope; real
+SDR deployments run off batteries, behind thermal limits, or under
+operator policy — the cap the scheduler must respect is a *trace*, not a
+constant. Every budget here exposes the same two-method interface:
+
+  - ``cap_at(t)``       — the admissible average power (watts) at scenario
+                          time ``t`` (seconds, t >= 0);
+  - ``change_times()``  — the (finite) times at which the cap steps, so
+                          harnesses can align control windows with the
+                          interesting moments of a trace.
+
+Caps are piecewise-constant in all provided traces; the governor only
+samples ``cap_at`` at its control ticks, so any monotone interpolation a
+subclass might add is also fine. The traces are deliberately tiny,
+deterministic objects: scenario tests script them exactly, and the DVB-S2
+presets (``repro.configs.dvbs2.budget_presets``) derive their watt levels
+from the platform's own Pareto frontier so each step forces a re-plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class PowerBudget:
+    """Interface: a power cap trace P_max(t) in watts over seconds."""
+
+    def cap_at(self, t: float) -> float:
+        raise NotImplementedError
+
+    def change_times(self) -> tuple[float, ...]:
+        """Times (s, ascending) at which the cap changes; empty if never."""
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantBudget(PowerBudget):
+    """A fixed operator-set cap — the degenerate (steady-state) trace."""
+
+    cap_w: float
+
+    def __post_init__(self):
+        if self.cap_w <= 0:
+            raise ValueError("cap_w must be positive")
+
+    def cap_at(self, t: float) -> float:
+        return self.cap_w
+
+
+@dataclasses.dataclass(frozen=True)
+class ScriptedBudget(PowerBudget):
+    """A piecewise-constant schedule: ``points[i] = (t_i, cap_i)`` means
+    the cap is ``cap_i`` from ``t_i`` (inclusive) until the next point.
+
+    Times must be strictly ascending and start at 0 so every t >= 0 is
+    covered; caps must be positive. This is the fully-general trace the
+    governor scenario tests script against."""
+
+    points: tuple[tuple[float, float], ...]
+
+    def __post_init__(self):
+        pts = tuple((float(t), float(c)) for t, c in self.points)
+        if not pts:
+            raise ValueError("ScriptedBudget needs at least one point")
+        if pts[0][0] != 0.0:
+            raise ValueError("first point must be at t=0")
+        times = [t for t, _ in pts]
+        if any(t1 >= t2 for t1, t2 in zip(times, times[1:])):
+            raise ValueError("point times must be strictly ascending")
+        if any(c <= 0 for _, c in pts):
+            raise ValueError("caps must be positive")
+        object.__setattr__(self, "points", pts)
+
+    def cap_at(self, t: float) -> float:
+        cap = self.points[0][1]
+        for ti, ci in self.points:
+            if ti <= t:
+                cap = ci
+            else:
+                break
+        return cap
+
+    def change_times(self) -> tuple[float, ...]:
+        return tuple(t for t, _ in self.points[1:])
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalThrottleBudget(PowerBudget):
+    """A thermal-limit step: nominal cap until ``t_throttle``, the
+    throttled cap while the package sheds heat, and (optionally) back to
+    nominal at ``t_recover`` — the classic skin-temperature governor
+    pattern on passively cooled parts."""
+
+    nominal_w: float
+    throttled_w: float
+    t_throttle: float
+    t_recover: float | None = None
+
+    def __post_init__(self):
+        if self.nominal_w <= 0 or self.throttled_w <= 0:
+            raise ValueError("caps must be positive")
+        if self.throttled_w >= self.nominal_w:
+            raise ValueError("throttled cap must be below nominal")
+        if self.t_throttle < 0:
+            raise ValueError("t_throttle must be >= 0")
+        if self.t_recover is not None and self.t_recover <= self.t_throttle:
+            raise ValueError("t_recover must be after t_throttle")
+
+    def cap_at(self, t: float) -> float:
+        if t < self.t_throttle:
+            return self.nominal_w
+        if self.t_recover is not None and t >= self.t_recover:
+            return self.nominal_w
+        return self.throttled_w
+
+    def change_times(self) -> tuple[float, ...]:
+        times = (self.t_throttle,)
+        if self.t_recover is not None:
+            times += (self.t_recover,)
+        return times
+
+
+@dataclasses.dataclass(frozen=True)
+class BatteryBudget(PowerBudget):
+    """Drain-to-empty: the cap steps down as the state of charge falls.
+
+    The battery starts full with ``capacity_j`` joules and is drained at
+    an assumed average ``drain_w`` (the system draw the trace models, not
+    necessarily what the governor achieves — this is an open-loop trace
+    like the others, which keeps scenarios reproducible). ``levels`` maps
+    minimum state-of-charge thresholds to caps:
+
+        levels = ((0.6, 35.0), (0.3, 20.0), (0.0, 8.0))
+
+    reads "35 W while SoC >= 60%, 20 W while >= 30%, 8 W to empty".
+    Thresholds must be strictly descending and end at 0.0 so the trace is
+    total; caps must be positive and non-increasing (a dying battery never
+    raises the cap)."""
+
+    capacity_j: float
+    drain_w: float
+    levels: tuple[tuple[float, float], ...]
+
+    def __post_init__(self):
+        if self.capacity_j <= 0 or self.drain_w <= 0:
+            raise ValueError("capacity_j and drain_w must be positive")
+        lv = tuple((float(s), float(c)) for s, c in self.levels)
+        if not lv:
+            raise ValueError("BatteryBudget needs at least one level")
+        socs = [s for s, _ in lv]
+        if any(s1 <= s2 for s1, s2 in zip(socs, socs[1:])):
+            raise ValueError("SoC thresholds must be strictly descending")
+        if lv[-1][0] != 0.0:
+            raise ValueError("last level must cover SoC 0.0 (empty)")
+        if socs[0] > 1.0:
+            raise ValueError("SoC thresholds cannot exceed 1.0 (full)")
+        caps = [c for _, c in lv]
+        if any(c <= 0 for c in caps):
+            raise ValueError("caps must be positive")
+        if any(c1 < c2 for c1, c2 in zip(caps, caps[1:])):
+            raise ValueError("caps must be non-increasing as SoC falls")
+        object.__setattr__(self, "levels", lv)
+
+    def soc_at(self, t: float) -> float:
+        """State of charge in [0, 1] at time ``t`` under the assumed drain."""
+        return max(0.0, 1.0 - self.drain_w * t / self.capacity_j)
+
+    def cap_at(self, t: float) -> float:
+        soc = self.soc_at(t)
+        for threshold, cap in self.levels:
+            if soc >= threshold:
+                return cap
+        return self.levels[-1][1]
+
+    def change_times(self) -> tuple[float, ...]:
+        """Times at which the SoC falls past a level threshold."""
+        times = []
+        for i in range(1, len(self.levels)):
+            s_prev = self.levels[i - 1][0]
+            times.append((1.0 - s_prev) * self.capacity_j / self.drain_w)
+        return tuple(times)

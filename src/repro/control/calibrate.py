@@ -1,0 +1,220 @@
+"""Trace-fitted power calibration: recover a PowerModel from runtime traces.
+
+The presets in ``repro.energy.model`` are order-of-magnitude estimates;
+the ROADMAP's measured-power item asks for watts fitted to what the
+platform actually draws. The model is linear in its unknowns, so ordinary
+least squares does it exactly: a measurement window of length ``T`` with
+per-core-type allocated core-seconds ``A_v``, busy core-seconds ``B_v(f)``
+at DVFS level ``f``, and measured energy ``E`` satisfies
+
+    E = sum_v  A_v * static_v  +  (sum_f B_v(f) * f^3) * dynamic_v
+
+(busy time at level f draws static + dynamic * f^3; allocated-but-idle
+time draws static — exactly the decomposition ``repro.energy.account``
+charges, so a fitted model plugs straight back into the frontier
+machinery). Four unknowns (static/dynamic x big/little), one row per
+window: a handful of windows at different utilizations pins them down.
+
+Sources of samples:
+
+  - :func:`sample_from_run` converts a ``StreamingPipelineRuntime.run()``
+    stats dict (its per-replica ``busy_s`` map and measured ``energy_j``)
+    into a :class:`TraceSample` — the "recorded trace" path;
+  - :func:`synthesize_samples` fabricates windows from a known model at
+    scripted utilizations (+ optional noise) — the round-trip test path,
+    and a stand-in for RAPL / powermetrics captures until real traces are
+    wired in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.chain import BIG, LITTLE
+from repro.energy.model import CoreTypePower, PowerModel
+
+_CLASS_TO_CTYPE = {"big": BIG, "little": LITTLE, BIG: BIG, LITTLE: LITTLE}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSample:
+    """One measurement window of a power trace.
+
+    ``alloc_s`` maps core type ('B'/'L') to allocated core-seconds over
+    the window (replicas x window length); ``busy_s`` maps
+    (core type, DVFS level) to busy core-seconds at that level. Busy time
+    must not exceed allocated time per type; ``energy_j`` is the measured
+    energy of the window in joules."""
+
+    alloc_s: Mapping[str, float]
+    busy_s: Mapping[tuple[str, float], float]
+    energy_j: float
+
+    def __post_init__(self):
+        alloc = {v: float(s) for v, s in self.alloc_s.items()}
+        busy = {(v, float(f)): float(s)
+                for (v, f), s in self.busy_s.items()}
+        if any(s < 0 for s in alloc.values()) \
+                or any(s < 0 for s in busy.values()):
+            raise ValueError("core-seconds must be non-negative")
+        if any(f <= 0 for _, f in busy):
+            raise ValueError("DVFS levels must be positive")
+        for v in set(v for v, _ in busy):
+            total_busy = sum(s for (vv, _), s in busy.items() if vv == v)
+            if total_busy > alloc.get(v, 0.0) * (1 + 1e-6) + 1e-9:
+                raise ValueError(
+                    f"busy core-seconds exceed allocated for type {v!r}")
+        if self.energy_j < 0:
+            raise ValueError("energy_j must be non-negative")
+        object.__setattr__(self, "alloc_s", alloc)
+        object.__setattr__(self, "busy_s", busy)
+
+    def busy_total(self, v: str) -> float:
+        return sum(s for (vv, _), s in self.busy_s.items() if vv == v)
+
+    def dyn_weight(self, v: str) -> float:
+        """The dynamic-watts regressor: sum_f busy_s[v, f] * f**3."""
+        return sum(s * f**3 for (vv, f), s in self.busy_s.items() if vv == v)
+
+
+def sample_from_run(stages, stats: dict) -> TraceSample:
+    """Build a :class:`TraceSample` from a runtime ``run()`` result.
+
+    ``stages`` are the runtime's StageSpecs (their ``device_class`` and
+    ``replicas`` size the allocation; stage names key the busy map) and
+    ``stats`` the dict ``StreamingPipelineRuntime.run`` returned — it must
+    contain ``energy_j`` (metered run) plus the standard ``total_s`` /
+    ``busy_s`` fields. All busy time is attributed to the nominal level
+    (the runtime does not yet simulate per-stage clocks; recorded traces
+    with real DVFS residency should build samples directly)."""
+    if "energy_j" not in stats:
+        raise ValueError("stats lack energy_j — run with a metered runtime "
+                         "(from_plan(..., power=...))")
+    window = stats["total_s"]
+    alloc = {BIG: 0.0, LITTLE: 0.0}
+    busy = {(BIG, 1.0): 0.0, (LITTLE, 1.0): 0.0}
+    by_stage = {}
+    for (name, _ri), s in stats["busy_s"].items():
+        by_stage[name] = by_stage.get(name, 0.0) + s
+    for spec in stages:
+        v = _CLASS_TO_CTYPE[spec.device_class]
+        alloc[v] += max(spec.replicas, 1) * window
+        busy[(v, 1.0)] += min(by_stage.get(spec.name, 0.0),
+                              max(spec.replicas, 1) * window)
+    return TraceSample(alloc, busy, stats["energy_j"])
+
+
+def synthesize_samples(
+    power: PowerModel,
+    utilizations: Sequence[tuple[float, float]],
+    window_s: float = 1.0,
+    cores: tuple[int, int] | Sequence[tuple[int, int]] = (4, 4),
+    freqs: tuple[float, float] = (1.0, 1.0),
+    noise: float = 0.0,
+    rng: np.random.Generator | None = None,
+) -> list[TraceSample]:
+    """Fabricate trace windows from a known model (the round-trip path).
+
+    Each ``(u_big, u_little)`` utilization pair in [0, 1] yields one
+    window of ``window_s`` seconds on ``cores = (n_big, n_little)`` cores
+    running busy time at per-type levels ``freqs``; ``noise`` is the
+    relative sigma of multiplicative Gaussian noise on the energy (0 =
+    exact).
+
+    ``cores`` may also be a per-window sequence of (n_big, n_little)
+    pairs (cycled if shorter than ``utilizations``). Identifying static
+    watts of BOTH core types needs windows whose *allocation* mix varies
+    — with one fixed core count the two allocation columns of the
+    least-squares system are proportional and the fit is rank-deficient.
+    """
+    core_seq = [cores] if isinstance(cores[0], int) else list(cores)
+    f_big, f_little = freqs
+    if rng is None:
+        rng = np.random.default_rng(0)
+    samples = []
+    for i, (u_big, u_little) in enumerate(utilizations):
+        if not (0.0 <= u_big <= 1.0 and 0.0 <= u_little <= 1.0):
+            raise ValueError("utilizations must be in [0, 1]")
+        n_big, n_little = core_seq[i % len(core_seq)]
+        alloc = {BIG: n_big * window_s, LITTLE: n_little * window_s}
+        busy = {(BIG, f_big): u_big * n_big * window_s,
+                (LITTLE, f_little): u_little * n_little * window_s}
+        e = 0.0
+        for v, f in ((BIG, f_big), (LITTLE, f_little)):
+            b = busy[(v, f)]
+            e += b * power.busy_watts(v, f) \
+                + (alloc[v] - b) * power.idle_watts(v)
+        if noise > 0.0:
+            e *= float(1.0 + noise * rng.standard_normal())
+        samples.append(TraceSample(alloc, busy, max(e, 0.0)))
+    return samples
+
+
+def fit_power_model(
+    samples: Iterable[TraceSample],
+    name: str = "calibrated",
+    freq_levels=None,
+) -> PowerModel:
+    """Least-squares fit of (static, dynamic) watts per core type.
+
+    Solves the linear system described in the module docstring with
+    ``numpy.linalg.lstsq`` and clamps tiny negative estimates (noise can
+    push an unconstrained fit below zero) to 0. Needs windows that
+    actually vary utilization per core type — four identical rows are
+    rank-deficient; a degenerate system raises. ``freq_levels`` seeds the
+    fitted model's DVFS ladder (default: nominal-only)."""
+    rows, energies = [], []
+    for s in samples:
+        rows.append([s.alloc_s.get(BIG, 0.0), s.dyn_weight(BIG),
+                     s.alloc_s.get(LITTLE, 0.0), s.dyn_weight(LITTLE)])
+        energies.append(s.energy_j)
+    if len(rows) < 2:
+        raise ValueError("need at least two trace windows to fit")
+    a = np.asarray(rows, dtype=np.float64)
+    y = np.asarray(energies, dtype=np.float64)
+    # drop all-zero columns (e.g. a platform with no little cores in the
+    # trace) and pin their coefficients at 0
+    active = np.flatnonzero(np.abs(a).sum(axis=0) > 0.0)
+    if len(active) == 0:
+        raise ValueError("traces contain no allocation at all")
+    rank = np.linalg.matrix_rank(a[:, active])
+    if rank < len(active):
+        raise ValueError(
+            "trace windows are rank-deficient (vary the utilizations "
+            "and/or window mix to identify all coefficients)")
+    coef = np.zeros(4)
+    coef[active], *_ = np.linalg.lstsq(a[:, active], y, rcond=None)
+    coef = np.maximum(coef, 0.0)
+    return PowerModel(
+        name=name,
+        big=CoreTypePower(static_watts=float(coef[0]),
+                          dynamic_watts=float(coef[1])),
+        little=CoreTypePower(static_watts=float(coef[2]),
+                             dynamic_watts=float(coef[3])),
+        freq_levels=freq_levels if freq_levels is not None else (1.0,),
+    )
+
+
+def fit_report(samples: Sequence[TraceSample], fitted: PowerModel) -> dict:
+    """Residual diagnostics of a fit: per-window predicted vs measured
+    energy, the relative RMS error, and the worst window."""
+    preds, meas = [], []
+    for s in samples:
+        e = 0.0
+        for (v, f), b in s.busy_s.items():
+            e += b * fitted.busy_watts(v, f)
+        for v, alloc in s.alloc_s.items():
+            e += (alloc - s.busy_total(v)) * fitted.idle_watts(v)
+        preds.append(e)
+        meas.append(s.energy_j)
+    preds_a, meas_a = np.asarray(preds), np.asarray(meas)
+    scale = np.maximum(np.abs(meas_a), 1e-12)
+    rel = np.abs(preds_a - meas_a) / scale
+    return {
+        "predicted_j": preds,
+        "measured_j": meas,
+        "rel_rms": float(np.sqrt(np.mean(rel**2))),
+        "rel_max": float(rel.max()),
+    }

@@ -1,0 +1,310 @@
+"""Closed-loop governor: monitor, detect, re-plan, swap.
+
+The bridge between the measured runtime (``repro.pipeline.runtime``) and
+the Pareto-frontier machinery (``repro.energy.pareto``). The paper's
+schedulers pick one static plan from an assumed power model; the governor
+closes the loop:
+
+    ┌─────────── observe ────────────┐
+    │  measured period / power, t    │
+    ▼                                │
+  MONITOR ──trigger?──► RE-PLAN ──► SWAP (runtime.rebuild)
+    │                      │
+    │   cap change         └─ min_period_under_power(chain, b, l,
+    │   drift > tolerance          power, cap_at(t), frontier=cached)
+    │   device loss
+    └── no trigger: keep streaming
+
+Triggers, in priority order at each :meth:`Governor.observe` tick:
+
+  1. **device loss** (:meth:`Governor.device_loss`): the (b, l) budget
+     shrank; the frontier is rebuilt for the new pool and the fastest
+     point under the current cap is swapped in.
+  2. **cap**: the budget trace's ``cap_at(t)`` dropped below the active
+     plan's predicted draw — or rose enough that a faster frontier point
+     (by at least ``upshift_margin``) became admissible.
+  3. **drift**: the measured period strayed from the active plan's
+     prediction by more than ``drift_tolerance`` (relative). The governor
+     then *recalibrates*: chain weights are rescaled by the measured /
+     predicted ratio (the uniform-slowdown model — e.g. co-located load or
+     wrong table entries), the frontier is rebuilt on the recalibrated
+     chain, and the fastest admissible point is re-selected. After
+     recalibration predictions match measurements, so a persistent bias
+     re-plans exactly once rather than every tick.
+
+When no frontier point fits under the cap the governor falls back to the
+frugalest point (min power) and flags the event ``cap_met=False`` — shed
+throughput, keep the chain alive.
+
+Periods are in the chain's time unit (µs for the DVB-S2 tables); budget
+trace times are seconds of scenario clock; predicted draws are watts
+(energy per frame / period). The governor itself is pure control logic
+over :class:`Observation` values — attach a
+:class:`~repro.pipeline.runtime.StreamingPipelineRuntime` and every
+re-plan is also swapped in via ``runtime.rebuild(plan)``; leave it
+detached and the same logic drives scripted scenario tests
+deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chain import BIG, LITTLE, Solution, TaskChain
+from repro.core.dvfs import FreqSolution
+from repro.energy.model import PowerModel
+from repro.energy.pareto import (
+    ParetoPoint,
+    dvfs_frontier,
+    min_period_under_power,
+    pareto_frontier,
+)
+
+from .budget import PowerBudget
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """One control-tick measurement window.
+
+    ``t`` is scenario time in seconds (the budget trace's clock);
+    ``period`` the measured steady-state period in the chain's time unit;
+    ``power_w`` the measured average draw (None if the runtime is not
+    metered); ``frames`` how many frames the window completed;
+    ``dropped`` how many it lost to the liveness deadline. A window with
+    drops measured a degraded pipeline, not the workload — its period is
+    never trusted for drift recalibration."""
+
+    t: float
+    period: float
+    power_w: float | None = None
+    frames: int = 0
+    dropped: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivePlan:
+    """A frontier point adopted as the running plan.
+
+    Quacks like a ``PipelinePlan`` as far as the runtime cares
+    (``solution`` / ``chain`` / ``freq_solution``), and carries the
+    frontier predictions the governor monitors against."""
+
+    chain: TaskChain
+    point: ParetoPoint
+
+    @property
+    def solution(self) -> Solution:
+        sol = self.point.solution
+        return sol.to_solution() if isinstance(sol, FreqSolution) else sol
+
+    @property
+    def freq_solution(self) -> FreqSolution | None:
+        sol = self.point.solution
+        return sol if isinstance(sol, FreqSolution) else None
+
+    @property
+    def predicted_period(self) -> float:
+        return self.point.period
+
+    @property
+    def predicted_watts(self) -> float:
+        return self.point.energy / self.point.period \
+            if self.point.period > 0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorEvent:
+    """One governor decision: which trigger fired and what was adopted."""
+
+    t: float
+    trigger: str                 # "start" | "cap" | "drift" | "device_loss"
+    cap_w: float
+    plan: ActivePlan
+    cap_met: bool = True         # False: fell back to the min-power point
+    detail: str = ""
+
+
+class Governor:
+    """Closed-loop re-planner over a (chain, pool, power model, budget).
+
+    ``drift_tolerance`` is the relative measured-vs-predicted period
+    deviation that triggers recalibration; ``upshift_margin`` the minimum
+    relative period improvement worth a swap when the cap rises (swap
+    hysteresis — re-planning drains the pipe, so marginal gains are not
+    worth it). ``dvfs=True`` plans off the frequency-swept frontier
+    (per-stage DVFS levels, per-core-type ladders honored) instead of the
+    nominal one.
+    """
+
+    def __init__(
+        self,
+        chain: TaskChain,
+        b: int,
+        l: int,
+        power: PowerModel,
+        budget: PowerBudget,
+        *,
+        runtime=None,
+        drift_tolerance: float = 0.25,
+        upshift_margin: float = 0.1,
+        dvfs: bool = False,
+        freq_levels=None,
+    ):
+        if drift_tolerance <= 0:
+            raise ValueError("drift_tolerance must be positive")
+        if upshift_margin < 0:
+            raise ValueError("upshift_margin must be non-negative")
+        self.chain = chain
+        self.b = b
+        self.l = l
+        self.power = power
+        self.budget = budget
+        self.runtime = runtime
+        self.drift_tolerance = drift_tolerance
+        self.upshift_margin = upshift_margin
+        self.dvfs = dvfs
+        self.freq_levels = freq_levels
+        self.events: list[GovernorEvent] = []
+        self.calibration_scale = 1.0   # cumulative drift recalibration
+        self._frontier: list[ParetoPoint] | None = None
+        self._plan: ActivePlan | None = None
+        self._last_cap: float | None = None
+
+    def attach(self, runtime) -> "Governor":
+        """Wire a runtime in after materializing the initial plan:
+        subsequent re-plans are swapped in via ``runtime.rebuild``."""
+        self.runtime = runtime
+        return self
+
+    # ------------------------------------------------------------- queries
+    @property
+    def plan(self) -> ActivePlan:
+        if self._plan is None:
+            raise RuntimeError("governor not started — call start() first")
+        return self._plan
+
+    @property
+    def replans(self) -> list[GovernorEvent]:
+        """Every adopted plan change after the initial one."""
+        return [e for e in self.events if e.trigger != "start"]
+
+    def frontier(self) -> list[ParetoPoint]:
+        """The cached (period, energy) frontier for the current pool and
+        (possibly recalibrated) chain."""
+        if self._frontier is None:
+            if self.dvfs:
+                self._frontier = dvfs_frontier(
+                    self.chain, self.b, self.l, self.power, self.freq_levels)
+            else:
+                self._frontier = pareto_frontier(
+                    self.chain, self.b, self.l, self.power)
+            if not self._frontier:
+                raise RuntimeError(
+                    f"no feasible schedule at all on b={self.b}, l={self.l}")
+        return self._frontier
+
+    # ------------------------------------------------------------- control
+    def start(self, t: float = 0.0) -> GovernorEvent:
+        """Adopt the fastest admissible plan under ``cap_at(t)``."""
+        if self._plan is not None:
+            raise RuntimeError("governor already started")
+        return self._adopt(t, "start", self.budget.cap_at(t))
+
+    def observe(self, obs: Observation) -> GovernorEvent | None:
+        """One control tick; returns the event if a re-plan fired."""
+        plan = self.plan  # raises if not started
+        cap = self.budget.cap_at(obs.t)
+        event = None
+        if plan.predicted_watts > cap * (1 + 1e-9):
+            # re-plan only if the selection actually changes: under a
+            # persistently infeasible cap the min-power fallback IS the
+            # active plan, and re-adopting it every tick would spam
+            # identical events without any swap
+            candidate = self._select(cap)
+            target = candidate if candidate is not None \
+                else self.frontier()[-1]
+            if target != plan.point:
+                event = self._adopt(obs.t, "cap", cap,
+                                    detail=f"cap dropped to {cap:.2f} W")
+        elif obs.dropped == 0 and self._drifted(obs.period):
+            # windows that lost frames to the liveness deadline measured
+            # a stalled pipeline, not the workload: rescaling the chain
+            # from one would poison every later prediction
+            ratio = obs.period / plan.predicted_period
+            self._recalibrate(ratio)
+            event = self._adopt(
+                obs.t, "drift", cap,
+                detail=f"measured/predicted period = {ratio:.3f}; "
+                       f"chain rescaled")
+        elif self._last_cap is not None and cap > self._last_cap * (1 + 1e-9):
+            candidate = self._select(cap)
+            if candidate is not None and candidate.period \
+                    < plan.predicted_period * (1 - self.upshift_margin):
+                event = self._adopt(obs.t, "cap", cap,
+                                    detail=f"cap rose to {cap:.2f} W")
+        self._last_cap = cap
+        return event
+
+    def device_loss(self, t: float, big: int = 0,
+                    little: int = 0) -> GovernorEvent:
+        """Shrink the pool and re-plan immediately (elastic scaling)."""
+        if big < 0 or little < 0 or big + little == 0:
+            raise ValueError("device_loss needs a positive core count")
+        if big > self.b or little > self.l:
+            raise ValueError(
+                f"cannot lose {big}B+{little}L from a "
+                f"{self.b}B+{self.l}L pool")
+        self.b -= big
+        self.l -= little
+        self._frontier = None
+        return self._adopt(t, "device_loss", self.budget.cap_at(t),
+                           detail=f"lost {big}B+{little}L -> "
+                                  f"{self.b}B+{self.l}L")
+
+    # ------------------------------------------------------------ internals
+    def _drifted(self, measured_period: float) -> bool:
+        predicted = self._plan.predicted_period
+        if predicted <= 0:
+            return False
+        return abs(measured_period - predicted) / predicted \
+            > self.drift_tolerance
+
+    def _recalibrate(self, ratio: float):
+        """Rescale chain weights so predictions match measurements."""
+        self.calibration_scale *= ratio
+        self.chain = TaskChain(
+            w_big=self.chain.w[BIG] * ratio,
+            w_little=self.chain.w[LITTLE] * ratio,
+            replicable=self.chain.replicable,
+            names=self.chain.names,
+        )
+        self._frontier = None
+
+    def _select(self, cap: float) -> ParetoPoint | None:
+        return min_period_under_power(
+            self.chain, self.b, self.l, self.power, cap,
+            dvfs=self.dvfs, freq_levels=self.freq_levels,
+            frontier=self.frontier())
+
+    def _adopt(self, t: float, trigger: str, cap: float,
+               detail: str = "") -> GovernorEvent:
+        point = self._select(cap)
+        cap_met = point is not None
+        if point is None:
+            point = self.frontier()[-1]  # min-power fallback: shed speed
+            detail = (detail + "; " if detail else "") + \
+                "cap infeasible, fell back to min-power point"
+        old = self._plan
+        self._plan = ActivePlan(self.chain, point)
+        event = GovernorEvent(t, trigger, cap, self._plan, cap_met, detail)
+        self.events.append(event)
+        self._last_cap = cap
+        if self.runtime is not None and (
+                old is None
+                or old.point.solution != point.solution
+                or trigger == "drift"):
+            # drift rebuilds even on an identical decomposition: stage fns
+            # may embed recalibrated latencies
+            if old is not None:  # the initial plan is materialized outside
+                self.runtime.rebuild(self._plan)
+        return event

@@ -1,0 +1,202 @@
+"""End-to-end scenario harness: governor + sleep-simulated runtime.
+
+Executes a scheduled chain on the real ``StreamingPipelineRuntime`` with
+stage functions that sleep each stage's per-frame work (chain time units
+scaled to wall seconds), while the :class:`~repro.control.governor.
+Governor` watches measured period/power against a scripted power budget.
+Used by ``examples/adaptive_governor.py``, ``benchmarks/
+control_scenarios.py`` and the scenario acceptance tests.
+
+Two clocks, deliberately decoupled:
+
+  - the *scenario clock* advances by ``window_dt`` seconds per control
+    window and drives the budget trace — so cap drops and battery
+    crossings land on deterministic windows regardless of host speed;
+  - the *wall clock* is what the runtime actually measures (periods,
+    busy seconds, energy) — real threads, real queues, real sleeps.
+
+``time_scale`` converts chain time units to simulated wall seconds (e.g.
+2e-6 runs a 1128 µs DVB-S2 period as ~2.3 ms per frame). Stage latency
+honors per-stage DVFS levels (sleep ∝ 1/f) and a drift knob that
+multiplies every sleep from a given window on — the measured-vs-predicted
+divergence the governor's recalibration trigger exists for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+from repro.core.chain import TaskChain
+from repro.pipeline.runtime import StreamingPipelineRuntime
+
+from .governor import Governor, GovernorEvent, Observation
+
+
+def sleep_stage_builder(
+    chain: TaskChain, time_scale: float,
+    knobs: dict | None = None,
+) -> Callable:
+    """A ``from_plan`` stage builder that sleeps each stage's work.
+
+    One replica executing tasks [start, end] per frame costs the stage
+    sum on its core type, scaled by 1/freq for DVFS stages and by
+    ``time_scale`` into wall seconds. ``knobs['latency_scale']`` (default
+    1.0) multiplies every sleep — the harness's drift injector."""
+    knobs = knobs if knobs is not None else {}
+
+    def build(start: int, end: int, stage) -> Callable:
+        freq = getattr(stage, "freq", 1.0)
+        per_frame = chain.stage_sum(start, end, stage.ctype) \
+            * time_scale / freq
+
+        def fn(x):
+            time.sleep(per_frame * knobs.get("latency_scale", 1.0))
+            return x
+
+        return fn
+
+    return build
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowRecord:
+    """Measurements and control state of one scenario window."""
+
+    index: int
+    t: float                    # scenario time at window start (s)
+    cap_w: float                # the budget's cap at window start
+    measured_period: float      # chain time units
+    predicted_period: float     # active plan's frontier prediction
+    measured_watts: float
+    predicted_watts: float
+    frames: int
+    events: tuple[GovernorEvent, ...]  # governor decisions taken this window
+
+    @property
+    def period_error(self) -> float:
+        """Relative |measured - predicted| / predicted period."""
+        if self.predicted_period <= 0:
+            return 0.0
+        return abs(self.measured_period - self.predicted_period) \
+            / self.predicted_period
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioResult:
+    windows: tuple[WindowRecord, ...]
+    events: tuple[GovernorEvent, ...]   # full governor history, start first
+    frames_fed: int
+    frames_delivered: int
+
+    @property
+    def frames_dropped(self) -> int:
+        return self.frames_fed - self.frames_delivered
+
+    @property
+    def replans(self) -> tuple[GovernorEvent, ...]:
+        return tuple(e for e in self.events if e.trigger != "start")
+
+    def describe(self) -> str:
+        lines = [f"{len(self.windows)} windows, {self.frames_fed} frames "
+                 f"({self.frames_dropped} dropped), "
+                 f"{len(self.replans)} re-plans"]
+        for e in self.events:
+            lines.append(
+                f"  t={e.t:6.2f}s {e.trigger:>11}: cap={e.cap_w:7.2f} W -> "
+                f"P={e.plan.predicted_period:8.1f} "
+                f"{e.plan.predicted_watts:6.2f} W"
+                + ("" if e.cap_met else "  [CAP NOT MET]")
+                + (f"  ({e.detail})" if e.detail else ""))
+        return "\n".join(lines)
+
+
+def run_scenario(
+    governor: Governor,
+    *,
+    time_scale: float = 2e-6,
+    n_windows: int = 12,
+    window_dt: float = 1.0,
+    frames_per_window: int = 30,
+    warmup: int = 8,
+    queue_depth: int = 4,
+    device_loss_at: Mapping[int, tuple[int, int]] | None = None,
+    drift_at: Sequence[tuple[int, float]] = (),
+) -> ScenarioResult:
+    """Drive ``governor`` end to end against a sleep-simulated runtime.
+
+    The governor must be freshly constructed (not started); its chain is
+    the physical workload. Per window: one control tick on the previous
+    window's measurement (so a cap step or drift re-plan lands before the
+    frames that must respect it), then scripted device losses
+    (``device_loss_at[window] = (big, little)``), then
+    ``frames_per_window`` frames through the runtime. ``drift_at`` is a
+    list of (window, latency multiplier) knob settings — the injected
+    slowdowns the drift trigger must catch.
+    """
+    base_chain = governor.chain
+    knobs: dict = {"latency_scale": 1.0}
+    builder = sleep_stage_builder(base_chain, time_scale, knobs)
+    governor.start(0.0)
+    runtime = StreamingPipelineRuntime.from_plan(
+        governor.plan, builder, queue_depth=queue_depth,
+        power=governor.power)
+    governor.attach(runtime)
+    runtime.start()
+
+    device_loss_at = dict(device_loss_at or {})
+    drift_schedule = dict(drift_at)
+    windows: list[WindowRecord] = []
+    fed = delivered = 0
+    prev_stats = None
+    try:
+        for w in range(n_windows):
+            t = w * window_dt
+            n_before = len(governor.events)
+            if prev_stats is not None:
+                governor.observe(Observation(
+                    t=t,
+                    period=prev_stats["period_s"] / time_scale,
+                    power_w=prev_stats.get("avg_power_w"),
+                    frames=len(prev_stats["outputs"]),
+                    dropped=prev_stats.get("frames_dropped", 0),
+                ))
+            if w in device_loss_at:
+                big, little = device_loss_at[w]
+                governor.device_loss(t, big=big, little=little)
+            if w in drift_schedule:
+                knobs["latency_scale"] = drift_schedule[w]
+            # liveness deadline: a stalled swap (lost sentinel, dead
+            # workers) surfaces as dropped frames, not a hung scenario —
+            # 10x the active plan's expected window duration, floored
+            # well above scheduler noise
+            expected_s = frames_per_window \
+                * governor.plan.predicted_period * time_scale
+            stats = runtime.run(list(range(frames_per_window)),
+                                warmup=min(warmup, frames_per_window - 1),
+                                timeout_s=max(5.0, 10.0 * expected_s))
+            fed += frames_per_window
+            delivered += len(stats["outputs"])
+            plan = governor.plan
+            windows.append(WindowRecord(
+                index=w,
+                t=t,
+                cap_w=governor.budget.cap_at(t),
+                measured_period=stats["period_s"] / time_scale,
+                predicted_period=plan.predicted_period,
+                measured_watts=stats.get("avg_power_w", 0.0),
+                predicted_watts=plan.predicted_watts,
+                frames=len(stats["outputs"]),
+                events=tuple(governor.events[n_before:]),
+            ))
+            prev_stats = stats
+            if stats["frames_dropped"] > 0:
+                # a timed-out window leaves stragglers in flight; rebuild
+                # to fresh queues/workers so later windows measure clean
+                # (run() flushes the sink, but in-flight frames could
+                # still land mid-batch otherwise)
+                runtime.rebuild(governor.plan)
+    finally:
+        runtime.stop()
+    return ScenarioResult(tuple(windows), tuple(governor.events),
+                          fed, delivered)

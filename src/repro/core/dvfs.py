@@ -201,26 +201,49 @@ def annotate_frequency(solution: Solution, f_big: float = 1.0,
 
 
 # ------------------------------------------------- frequency-indexed tables
+def _ladder(levels: Iterable[float]) -> list[float]:
+    out = sorted(set(float(f) for f in levels))
+    if not out or out[0] <= 0:
+        raise ValueError("freq_levels must be positive")
+    return out
+
+
 def dvfs_tables(
-    chain: TaskChain, b: int, l: int, freq_levels: Iterable[float],
+    chain: TaskChain, b: int, l: int,
+    freq_levels: Iterable[float] | Mapping[str, Iterable[float]],
 ) -> dict[tuple[float, float], tuple[_Matrix, TaskChain]]:
     """Frequency-indexed HeRAD tables over the (f_big, f_little) grid.
 
     For every profile in the cross product of ``freq_levels`` (deduplicated,
     ascending) this runs the vectorized HeRAD DP (``herad_table``) on the
-    1/f-scaled chain. Each entry maps the profile to its filled solution
-    matrix plus the scaled chain it was computed on, ready for
+    1/f-scaled chain. ``freq_levels`` is one ladder shared by both core
+    types, or a ``{BIG: ladder, LITTLE: ladder}`` mapping when the types
+    expose different OPP tables — the grid is then the cross product of
+    the two per-type ladders. Each entry maps the profile to its filled
+    solution matrix plus the scaled chain it was computed on, ready for
     :func:`extract_dvfs_solution` — which, like plain ``extract_solution``,
     can read out the optimum for ANY sub-budget (b', l') <= (b, l). The
     energy layer sweeps this (budget x budget x profile) cube to build
     DVFS Pareto frontiers.
     """
-    levels = sorted(set(float(f) for f in freq_levels))
-    if not levels or levels[0] <= 0:
-        raise ValueError("freq_levels must be positive")
+    if isinstance(freq_levels, Mapping):
+        unknown = set(freq_levels) - {BIG, LITTLE}
+        if unknown:
+            raise ValueError(f"unknown core types in freq_levels: "
+                             f"{sorted(unknown)} (use {BIG!r}/{LITTLE!r})")
+        missing = {BIG, LITTLE} - set(freq_levels)
+        if missing:
+            # same contract as repro.energy.model.normalize_freq_levels:
+            # a partial mapping is a bug, not a request for nominal
+            raise ValueError(f"per-core-type freq_levels must cover both "
+                             f"types; missing {sorted(missing)}")
+        big_levels = _ladder(freq_levels[BIG])
+        little_levels = _ladder(freq_levels[LITTLE])
+    else:
+        big_levels = little_levels = _ladder(freq_levels)
     tables: dict[tuple[float, float], tuple[_Matrix, TaskChain]] = {}
-    for fb in levels:
-        for fl in levels:
+    for fb in big_levels:
+        for fl in little_levels:
             scaled = scale_chain(chain, fb, fl)
             tables[(fb, fl)] = (herad_table(scaled, b, l), scaled)
     return tables

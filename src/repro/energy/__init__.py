@@ -20,6 +20,7 @@ are watts, so energies come out in watt x time-unit (µJ per frame).
 from .model import (  # noqa: F401
     CoreTypePower,
     PowerModel,
+    normalize_freq_levels,
     DEFAULT_DVFS_POWER,
     DEFAULT_POWER,
     POWER_AMD_RYZEN_AI9,
@@ -41,6 +42,7 @@ from .pareto import (  # noqa: F401
     freqherad,
     min_energy_under_period,
     min_energy_under_period_freq,
+    min_period_under_power,
     pareto_frontier,
     sweep_budgets,
     sweep_budgets_freq,

@@ -24,9 +24,44 @@ see docs/energy.md for the calibration story.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
 
 from repro.core.chain import BIG, LITTLE, TaskChain
 from repro.core.dvfs import scale_chain as _scale_chain
+
+# Accepted spellings for per-core-type frequency-ladder keys.
+_CTYPE_ALIASES = {BIG: BIG, LITTLE: LITTLE, "big": BIG, "little": LITTLE}
+
+
+def _normalize_ladder(levels) -> tuple[float, ...]:
+    levels = tuple(float(f) for f in levels)
+    if not levels or any(f <= 0 for f in levels):
+        raise ValueError("freq_levels must be positive")
+    return levels
+
+
+def normalize_freq_levels(
+    freq_levels,
+) -> tuple[float, ...] | dict[str, tuple[float, ...]]:
+    """Validate a frequency-ladder spec: either one shared tuple of
+    positive normalized levels, or a per-core-type mapping with keys
+    'B'/'L' (aliases 'big'/'little') covering both types."""
+    if isinstance(freq_levels, Mapping):
+        ladders: dict[str, tuple[float, ...]] = {}
+        for key, levels in freq_levels.items():
+            ctype = _CTYPE_ALIASES.get(key)
+            if ctype is None:
+                raise ValueError(
+                    f"unknown core type {key!r} in freq_levels (use "
+                    f"'B'/'L' or 'big'/'little')")
+            ladders[ctype] = _normalize_ladder(levels)
+        missing = {BIG, LITTLE} - ladders.keys()
+        if missing:
+            raise ValueError(
+                f"per-core-type freq_levels must cover both types; "
+                f"missing {sorted(missing)}")
+        return ladders
+    return _normalize_ladder(freq_levels)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,16 +90,30 @@ class PowerModel:
 
     ``freq_levels`` are normalized frequencies (1.0 = nominal). Running at
     level f multiplies dynamic power by f**3 and task latency by 1/f.
+    The ladder is either one tuple shared by both core types (the
+    backward-compatible default) or a per-core-type mapping such as
+    ``{"big": (0.5, 1.0), "little": (0.75, 1.0)}`` — real hybrid parts
+    expose different OPP tables per cluster. :meth:`levels_for` resolves
+    the ladder of one type either way.
     """
 
     name: str
     big: CoreTypePower
     little: CoreTypePower
-    freq_levels: tuple[float, ...] = (1.0,)
+    freq_levels: tuple[float, ...] | Mapping[str, tuple[float, ...]] = (1.0,)
 
     def __post_init__(self):
-        if not self.freq_levels or any(f <= 0 for f in self.freq_levels):
-            raise ValueError("freq_levels must be positive")
+        object.__setattr__(self, "freq_levels",
+                           normalize_freq_levels(self.freq_levels))
+
+    def levels_for(self, v: str) -> tuple[float, ...]:
+        """The DVFS ladder of core type ``v`` ('B' or 'L')."""
+        if isinstance(self.freq_levels, Mapping):
+            ctype = _CTYPE_ALIASES.get(v)
+            if ctype is None:
+                raise ValueError(f"unknown core type {v!r}")
+            return self.freq_levels[ctype]
+        return self.freq_levels
 
     def core(self, v: str) -> CoreTypePower:
         if v == BIG:
@@ -93,14 +142,16 @@ class PowerModel:
     @classmethod
     def from_device_classes(cls, system, idle_fraction: float = 0.1,
                             name: str = "device-classes",
-                            freq_levels: tuple[float, ...] = (1.0,),
+                            freq_levels: tuple[float, ...]
+                            | Mapping[str, tuple[float, ...]] = (1.0,),
                             ) -> "PowerModel":
         """Build a model from a planner HeterogeneousSystem.
 
         ``DeviceClass.watts`` is the busy draw; ``idle_fraction`` of it is
         attributed to static (idle) power, the rest to dynamic.
         ``freq_levels`` opts the model into DVFS (e.g. for the planner's
-        ``freqherad`` strategy); the default keeps it nominal-only.
+        ``freqherad`` strategy) — one shared tuple or a per-core-type
+        mapping; the default keeps it nominal-only.
         """
         def split(watts: float) -> CoreTypePower:
             return CoreTypePower(static_watts=watts * idle_fraction,

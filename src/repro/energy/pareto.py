@@ -49,7 +49,14 @@ Three complementary tools on top of the HeRAD dynamic program:
   1/f_max-scaled chain — reusing ``herad_table`` machinery via
   ``repro.core.dvfs``), and the DP then spends any per-stage slack on
   downclocking. :func:`dvfs_frontier` sweeps frequency as a third axis of
-  the Pareto enumeration.
+  the Pareto enumeration. Per-core-type frequency ladders are honored
+  throughout: ``freq_levels`` may be one shared tuple or a
+  ``{"big": ..., "little": ...}`` mapping.
+
+A fourth tool inverts the constraint: :func:`min_period_under_power`
+returns the fastest frontier point whose average draw fits under an
+operator power cap — the re-planning query of the runtime governor
+(``repro.control``) and of ``plan_pipeline(..., power_cap_w=...)``.
 """
 from __future__ import annotations
 
@@ -76,7 +83,12 @@ from repro.core.dvfs import (
 from repro.core.herad import extract_solution, herad, herad_table
 
 from .account import energy, stage_energy_terms
-from .model import DEFAULT_DVFS_POWER, DEFAULT_POWER, PowerModel
+from .model import (
+    DEFAULT_DVFS_POWER,
+    DEFAULT_POWER,
+    PowerModel,
+    normalize_freq_levels,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,23 +183,27 @@ def pareto_frontier(
 
 
 def _resolve_levels(
-    power: PowerModel, freq_levels: tuple[float, ...] | None,
-) -> tuple[float, ...]:
-    """Normalize a frequency ladder: default to the model's, deduplicate,
-    sort ascending, reject non-positive levels. Single source for every
-    frequency-aware entry point."""
-    levels = tuple(freq_levels) if freq_levels is not None \
-        else power.freq_levels
-    if not levels or any(f <= 0 for f in levels):
-        raise ValueError("freq_levels must be positive")
-    return tuple(sorted(set(levels)))
+    power: PowerModel, freq_levels=None,
+) -> dict[str, tuple[float, ...]]:
+    """Normalize a frequency-ladder spec into per-core-type ladders.
+
+    Defaults to the model's ladder; accepts one shared tuple or a
+    per-core-type mapping (``normalize_freq_levels``), deduplicates and
+    sorts each ladder ascending, rejects non-positive levels. Single
+    source for every frequency-aware entry point; always returns a
+    ``{B: ladder, L: ladder}`` dict."""
+    spec = freq_levels if freq_levels is not None else power.freq_levels
+    norm = normalize_freq_levels(spec)
+    if not isinstance(norm, dict):
+        norm = {BIG: norm, LITTLE: norm}
+    return {v: tuple(sorted(set(levels))) for v, levels in norm.items()}
 
 
 # ------------------------------------------------------- energy-constrained
 def min_energy_under_period_freq(
     chain: TaskChain, b: int, l: int, p_max: float,
     power: PowerModel = DEFAULT_DVFS_POWER,
-    freq_levels: tuple[float, ...] | None = None,
+    freq_levels=None,
 ) -> FreqSolution:
     """Minimum-energy (schedule, per-stage DVFS level) with period <= p_max.
 
@@ -199,12 +215,15 @@ def min_energy_under_period_freq(
     source of truth the accounting report uses, so the DP's objective and
     the reported energy cannot drift apart.
 
-    ``freq_levels`` defaults to ``power.freq_levels``; passing ``(1.0,)``
-    reproduces the nominal energad DP exactly (identical candidate
-    enumeration order and tie-breaking). Ties break on
-    (energy, big cores used, little cores used), then lowest frequency.
-    Returns EMPTY_FREQ_SOLUTION when no assignment meets the bound —
-    including ``p_max=inf``, where idle energy against the beat diverges.
+    ``freq_levels`` defaults to ``power.freq_levels`` and may be one
+    shared tuple or a per-core-type mapping (``{"big": ..., "little":
+    ...}``) — each type's candidates are drawn from its own ladder.
+    Passing ``(1.0,)`` reproduces the nominal energad DP exactly
+    (identical candidate enumeration order and tie-breaking). Ties break
+    on (energy, big cores used, little cores used), then lowest
+    frequency. Returns EMPTY_FREQ_SOLUTION when no assignment meets the
+    bound — including ``p_max=inf``, where idle energy against the beat
+    diverges.
     """
     levels = _resolve_levels(power, freq_levels)
     if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
@@ -229,7 +248,7 @@ def min_energy_under_period_freq(
                 if cap == 0:
                     continue
                 total = chain.stage_sum(i, j, v)
-                for f in levels:
+                for f in levels[v]:
                     work = total / f
                     r = cores_for_work(work, p_max)
                     if not rep:
@@ -336,7 +355,7 @@ def freqherad(
     chain: TaskChain, b: int, l: int,
     power: PowerModel | None = None,
     p_max: float | None = None,
-    freq_levels: tuple[float, ...] | None = None,
+    freq_levels=None,
 ) -> FreqSolution:
     """DVFS-aware HeRAD: per-stage (core type, replicas, frequency level),
     lexicographically optimizing (period, energy).
@@ -352,8 +371,9 @@ def freqherad(
     unit work) as long as its replica count still fits the budget.
 
     ``power`` defaults to :data:`repro.energy.model.DEFAULT_DVFS_POWER`;
-    ``freq_levels`` to ``power.freq_levels``. At ``freq_levels=(1.0,)``
-    this degenerates to ``energad`` exactly. Registered in
+    ``freq_levels`` to ``power.freq_levels`` (shared tuple or
+    per-core-type mapping). At ``freq_levels=(1.0,)`` this degenerates to
+    ``energad`` exactly. Registered in
     ``repro.core.STRATEGIES`` as ``"freqherad"``. Returns a
     :class:`repro.core.dvfs.FreqSolution`; periods in the chain's time
     unit (µs), energies costed in watt x time-unit (µJ).
@@ -364,19 +384,19 @@ def freqherad(
     if b + l <= 0:
         return EMPTY_FREQ_SOLUTION
     if p_max is None:
-        fmax = levels[-1]
-        ref = herad(scale_chain(chain, fmax, fmax), b, l)
+        fb_max, fl_max = levels[BIG][-1], levels[LITTLE][-1]
+        ref = herad(scale_chain(chain, fb_max, fl_max), b, l)
         if ref.is_empty():
             return EMPTY_FREQ_SOLUTION
         # period via the FreqSolution weight formula so the bound and the
         # DP's feasibility checks use consistent arithmetic
-        p_max = annotate_frequency(ref, fmax, fmax).period(chain)
+        p_max = annotate_frequency(ref, fb_max, fl_max).period(chain)
     return min_energy_under_period_freq(chain, b, l, p_max, power, levels)
 
 
 def sweep_budgets_freq(
     chain: TaskChain, b: int, l: int, power: PowerModel,
-    freq_levels: tuple[float, ...] | None = None,
+    freq_levels=None,
 ) -> list[ParetoPoint]:
     """All (sub-budget x frequency-profile) HeRAD optima with energies.
 
@@ -384,7 +404,9 @@ def sweep_budgets_freq(
     per-core-type profile (f_big, f_little) on the level grid, one
     vectorized HeRAD table over the 1/f-scaled chain
     (``repro.core.dvfs.dvfs_tables``) yields the period-optimal schedule
-    of every sub-budget (b', l') <= (b, l). Points carry
+    of every sub-budget (b', l') <= (b, l). Each core type draws its
+    profile entry from its own ladder when ``freq_levels`` (or the
+    model's) is a per-core-type mapping. Points carry
     :class:`~repro.core.dvfs.FreqSolution` schedules annotated with the
     profile, costed at their own achieved period; sorted by
     (period, energy).
@@ -411,7 +433,7 @@ def sweep_budgets_freq(
 
 def dvfs_frontier(
     chain: TaskChain, b: int, l: int, power: PowerModel,
-    freq_levels: tuple[float, ...] | None = None,
+    freq_levels=None,
     refine: bool = True,
 ) -> list[ParetoPoint]:
     """The (period, energy) frontier with frequency as a third sweep axis.
@@ -441,3 +463,40 @@ def dvfs_frontier(
             ParetoPoint(pt.period, e, fsol, fsol.core_usage())
             if e < pt.energy else pt)
     return _non_dominated(refined)
+
+
+# ---------------------------------------------------------- power-cap query
+def min_period_under_power(
+    chain: TaskChain, b: int, l: int, power: PowerModel, cap_w: float,
+    dvfs: bool = False,
+    freq_levels=None,
+    frontier: list[ParetoPoint] | None = None,
+) -> ParetoPoint | None:
+    """Fastest frontier point whose average power fits under ``cap_w``.
+
+    The dual of :func:`min_energy_under_period` and the re-planning query
+    of the runtime governor (``repro.control``): among the (period,
+    energy) Pareto frontier of (``chain``, b, l), return the
+    minimum-period point with average draw ``energy / period <= cap_w``
+    (watts, since energies are watt x time-unit per frame and periods are
+    in the same time unit). Average power is strictly decreasing along the
+    frontier (energy falls while period rises), so the first point under
+    the cap is the fastest feasible one.
+
+    ``dvfs=True`` queries the frequency-swept frontier
+    (:func:`dvfs_frontier`, per-stage levels from ``freq_levels`` /
+    ``power.freq_levels``) instead of the nominal one; the returned
+    point then carries a :class:`~repro.core.dvfs.FreqSolution`. Passing
+    a precomputed ``frontier`` (sorted ascending by period, as the
+    frontier builders return it) skips the sweep — the governor caches it
+    across control ticks. Returns ``None`` when even the frugalest
+    frontier point exceeds the cap (or the frontier is empty); callers
+    decide the fallback policy.
+    """
+    if frontier is None:
+        frontier = dvfs_frontier(chain, b, l, power, freq_levels) if dvfs \
+            else pareto_frontier(chain, b, l, power)
+    for pt in frontier:
+        if pt.period > 0 and pt.energy / pt.period <= cap_w + 1e-9:
+            return pt
+    return None

@@ -187,7 +187,8 @@ class PipelinePlan:
 
 def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
                   tokens_per_step: int, mode: str = "decode",
-                  strategy: str = "herad", power=None) -> PipelinePlan:
+                  strategy: str = "herad", power=None,
+                  power_cap_w: float | None = None) -> PipelinePlan:
     """Schedule ``cfg``'s layer chain onto ``system``.
 
     For the energy-constrained ``strategy="energad"`` the optional
@@ -204,9 +205,21 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
     ``power`` with custom ``freq_levels`` to override. The plan's period
     equals nominal HeRAD's optimum (top level = 1.0), so DVFS only
     spends slack, never throughput.
+
+    ``power_cap_w`` plans under an operator power cap instead: the
+    fastest (period, energy) Pareto-frontier point whose average draw
+    fits under the cap (``repro.energy.pareto.min_period_under_power``) —
+    the runtime governor's re-plan query, exposed here so an initial
+    deployment and every later re-plan pick schedules the same way.
+    ``strategy`` then only selects the frontier ("freqherad" sweeps
+    per-stage DVFS levels; anything else uses the nominal frontier).
+    Raises when even the frugalest schedule exceeds the cap.
     """
     chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
                            system=system)
+    if power_cap_w is not None:
+        return _plan_under_cap(cfg, chain, system, tokens_per_step,
+                               strategy, power, power_cap_w)
     if strategy == "energad":
         from repro.energy.model import PowerModel
         from repro.energy.pareto import energad
@@ -241,3 +254,28 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
             f"no feasible schedule for {cfg.name} on b={system.big.count}, "
             f"l={system.little.count}")
     return PipelinePlan(sol, chain, sol.period(chain), tokens_per_step)
+
+
+def _plan_under_cap(cfg, chain, system: HeterogeneousSystem,
+                    tokens_per_step: int, strategy: str, power,
+                    power_cap_w: float) -> PipelinePlan:
+    """Fastest frontier plan with average draw <= ``power_cap_w``."""
+    from repro.core.dvfs import FreqSolution
+    from repro.energy.model import DEFAULT_DVFS_POWER, PowerModel
+    from repro.energy.pareto import min_period_under_power
+
+    dvfs = strategy == "freqherad"
+    if power is None:
+        power = PowerModel.from_device_classes(
+            system,
+            freq_levels=DEFAULT_DVFS_POWER.freq_levels if dvfs else (1.0,))
+    pt = min_period_under_power(chain, system.big.count, system.little.count,
+                                power, power_cap_w, dvfs=dvfs)
+    if pt is None:
+        raise ValueError(
+            f"no schedule for {cfg.name} fits under {power_cap_w} W on "
+            f"b={system.big.count}, l={system.little.count}")
+    if isinstance(pt.solution, FreqSolution):
+        return PipelinePlan(pt.solution.to_solution(), chain, pt.period,
+                            tokens_per_step, freq_solution=pt.solution)
+    return PipelinePlan(pt.solution, chain, pt.period, tokens_per_step)

@@ -12,7 +12,9 @@ host-driven streaming system:
     restores ordering (the 'emit' sequential task);
   - throughput/period measured over the steady-state window;
   - elastic scaling: `rebuild(plan)` drains the pipe and re-materializes
-    stages from a new schedule (used after simulated device loss).
+    stages from a new schedule, preserving the global sequence counter
+    (used after simulated device loss and by the repro.control governor's
+    closed-loop re-planning).
 
 Stage functions are arbitrary callables (jitted JAX fns or plain Python for
 synthetic chains), so the same runtime executes both the DVB-S2-style
@@ -21,6 +23,7 @@ synthetic chains and per-layer LM stage functions.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue
 import threading
 import time
@@ -48,10 +51,32 @@ class _Sentinel:
 _STOP = _Sentinel()
 
 
+def _call_builder(builder: Callable, st) -> Callable:
+    """Invoke a stage-fn builder as ``builder(start, end)`` or, when it
+    accepts a third positional parameter, ``builder(start, end, stage)``
+    — the stage object carries cores/ctype (and ``freq`` for DVFS plans),
+    which simulation builders need to size their per-frame latencies.
+    Only positional parameters count (``*args`` accepts the stage;
+    keyword-only params and ``**kwargs`` don't change the call)."""
+    try:
+        params = list(inspect.signature(builder).parameters.values())
+    except (TypeError, ValueError):
+        return builder(st.start, st.end)
+    if any(p.kind is p.VAR_POSITIONAL for p in params):
+        return builder(st.start, st.end, st)
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if len(positional) >= 3:
+        return builder(st.start, st.end, st)
+    return builder(st.start, st.end)
+
+
 class StreamingPipelineRuntime:
-    def __init__(self, stages: Sequence[StageSpec], queue_depth: int = 8):
+    def __init__(self, stages: Sequence[StageSpec], queue_depth: int = 8,
+                 on_event: Callable[[str, dict], None] | None = None):
         self.stages = list(stages)
         self.queue_depth = queue_depth
+        self.on_event = on_event
         self._queues: list[queue.Queue] = []
         self._threads: list[threading.Thread] = []
         self._out: list[tuple[int, Any]] = []
@@ -59,6 +84,16 @@ class StreamingPipelineRuntime:
         self._replica_counts: dict[tuple[str, int], int] = {}
         self._busy_s: dict[tuple[str, int], float] = {}
         self._started = False
+        self._next_seq = 0           # survives rebuild(): global frame ids
+        self._alive: list[int] = []  # live workers per stage (stop protocol)
+        self._alive_lock = threading.Lock()
+        # from_plan wiring, so rebuild(plan) can re-materialize stages
+        self._builder: Callable | None = None
+        self._power = None
+
+    def _emit(self, event: str, **payload):
+        if self.on_event is not None:
+            self.on_event(event, payload)
 
     # ------------------------------------------------------------- workers
     def _worker(self, si: int, ri: int):
@@ -69,7 +104,16 @@ class StreamingPipelineRuntime:
         while True:
             item = q_in.get()
             if isinstance(item, _Sentinel):
-                q_in.put(item)  # let sibling replicas see the stop signal
+                with self._alive_lock:
+                    self._alive[si] -= 1
+                    last = self._alive[si] == 0
+                if not last:
+                    q_in.put(item)  # let sibling replicas see the stop signal
+                elif si + 1 < len(self.stages):
+                    # last replica out forwards the sentinel downstream so
+                    # stages >= 1 terminate too (the sink queue never gets
+                    # one: run()'s drain thread only expects frames)
+                    q_out.put(item)
                 return
             seq, payload = item
             t_busy0 = time.perf_counter()
@@ -91,6 +135,7 @@ class StreamingPipelineRuntime:
         self._queues = [queue.Queue(maxsize=self.queue_depth)
                         for _ in range(n)]
         self._queues.append(queue.Queue())  # unbounded sink
+        self._alive = [max(spec.replicas, 1) for spec in self.stages]
         for si, spec in enumerate(self.stages):
             for ri in range(max(spec.replicas, 1)):
                 t = threading.Thread(target=self._worker, args=(si, ri),
@@ -98,24 +143,47 @@ class StreamingPipelineRuntime:
                 t.start()
                 self._threads.append(t)
         self._started = True
+        self._emit("start", stages=[s.name for s in self.stages])
         return self
 
     # ---------------------------------------------------------------- run
-    def run(self, frames: Sequence[Any], warmup: int = 0) -> dict:
-        """Push frames through; returns outputs + timing stats."""
+    def run(self, frames: Sequence[Any], warmup: int = 0,
+            timeout_s: float | None = None) -> dict:
+        """Push frames through; returns outputs + timing stats.
+
+        Sequence ids are drawn from a runtime-global counter, so ordering
+        is preserved across ``rebuild()`` boundaries between runs.
+
+        ``timeout_s`` bounds the wait for the whole batch: frames not
+        emitted by the deadline are reported as dropped (the ``outputs``
+        come back short) instead of blocking forever — the liveness
+        check the control-layer scenarios assert on. A timed-out run
+        leaves stragglers in flight; ``stop()`` or ``rebuild()`` the
+        runtime before reusing it."""
         if not self._started:
             self.start()
         busy0 = dict(self._busy_s)  # meter this run only, not prior runs
         t0 = time.perf_counter()
         marks = {}
         sink = self._queues[-1]
+        # flush leftovers from a previous timed-out run (its abort
+        # sentinel, or stragglers that landed after its deadline) so they
+        # cannot be miscounted as this batch's output
+        while True:
+            try:
+                sink.get_nowait()
+            except queue.Empty:
+                break
         done = threading.Event()
         expected = len(frames)
         outs: list[tuple[int, Any]] = []
 
         def drain():
             while len(outs) < expected:
-                seq, result = sink.get()
+                item = sink.get()
+                if isinstance(item, _Sentinel):
+                    break  # timed out: give up on the stragglers
+                seq, result = item
                 if len(outs) == warmup:
                     marks["steady_start"] = time.perf_counter()
                 outs.append((seq, result))
@@ -124,17 +192,25 @@ class StreamingPipelineRuntime:
 
         dr = threading.Thread(target=drain, daemon=True)
         dr.start()
+        seq0 = self._next_seq
+        self._next_seq += expected
         for i, f in enumerate(frames):
-            self._queues[0].put((i, f))
-        done.wait()
+            self._queues[0].put((seq0 + i, f))
+        if not done.wait(timeout_s):
+            if not done.is_set():  # narrow the lost-race window: if the
+                # drain finished at the deadline, don't orphan a sentinel
+                sink.put(_Sentinel())  # unblock the drain thread
+            done.wait()
         steady = marks["end"] - marks.get("steady_start", t0)
-        n_steady = expected - warmup
+        n_steady = len(outs) - warmup  # == expected - warmup unless timed out
         outs.sort(key=lambda x: x[0])  # ordered emit
         total_s = marks["end"] - t0
         busy_s = {k: v - busy0.get(k, 0.0) for k, v in self._busy_s.items()
                   if v - busy0.get(k, 0.0) > 0.0}
         stats = {
             "outputs": [o for _, o in outs],
+            "seq_ids": [s for s, _ in outs],
+            "frames_dropped": expected - len(outs),
             "total_s": total_s,
             "period_s": steady / max(n_steady, 1),
             "throughput_fps": max(n_steady, 1) / steady if steady > 0 else 0.0,
@@ -165,34 +241,95 @@ class StreamingPipelineRuntime:
         return total
 
     def stop(self):
-        if self._queues:
+        """Drain and terminate all workers.
+
+        The stop sentinel enters stage 0's queue behind any in-flight
+        frames (FIFO), circulates among that stage's replicas, and the
+        last replica out forwards it downstream — so every queued frame is
+        processed before the pipeline winds down, stage by stage."""
+        if self._queues and self._started:
             self._queues[0].put(_STOP)
         for t in self._threads:
             t.join(timeout=2.0)
         self._threads = []
         self._started = False
+        self._emit("stop")
 
     # -------------------------------------------------------------- elastic
-    @classmethod
-    def from_plan(cls, plan, stage_fn_builder: Callable[[int, int], Callable],
-                  queue_depth: int = 8, power=None
-                  ) -> "StreamingPipelineRuntime":
-        """Materialize stage workers from a PipelinePlan.
+    @staticmethod
+    def _specs_from_plan(plan, stage_fn_builder: Callable,
+                         power=None) -> list[StageSpec]:
+        """StageSpecs for a PipelinePlan(-like) object.
 
-        ``stage_fn_builder(start, end)`` returns the callable executing chain
-        tasks [start, end]. Passing a ``repro.energy.model.PowerModel`` as
-        ``power`` enables wall-clock energy metering: each run() reports
-        ``energy_j`` (per-replica busy time at busy watts + allocated idle
-        time at idle watts) next to the measured period."""
+        DVFS plans (``plan.freq_solution`` set) are materialized from the
+        frequency-annotated stages: busy watts are taken at each stage's
+        level, and three-argument builders receive the FreqStage so they
+        can scale latencies by 1/f."""
+        freq_solution = getattr(plan, "freq_solution", None)
+        stages = freq_solution.stages if freq_solution is not None \
+            else plan.solution.stages
         specs = []
-        for st in plan.solution.stages:
-            fn = stage_fn_builder(st.start, st.end)
+        for st in stages:
+            fn = _call_builder(stage_fn_builder, st)
+            freq = getattr(st, "freq", 1.0)
             specs.append(StageSpec(
                 name=f"s{st.start}-{st.end}",
                 fn=fn,
                 replicas=st.cores if plan.chain.is_rep(st.start, st.end) else 1,
                 device_class="big" if st.ctype == "B" else "little",
-                busy_watts=power.busy_watts(st.ctype) if power else 0.0,
+                busy_watts=power.busy_watts(st.ctype, freq) if power else 0.0,
                 idle_watts=power.idle_watts(st.ctype) if power else 0.0,
             ))
-        return cls(specs, queue_depth=queue_depth)
+        return specs
+
+    def rebuild(self, plan, stage_fn_builder: Callable | None = None):
+        """Drain the pipe and re-materialize stages from a new plan.
+
+        The elastic-scaling / governor swap path: ``stop()`` lets every
+        in-flight frame finish (the sentinel trails them through each
+        queue), then workers are rebuilt from ``plan`` and restarted if
+        the runtime was running. The global sequence counter is preserved,
+        so frames fed after the rebuild continue the id stream and the
+        ordered emit stays correct across the swap.
+
+        ``stage_fn_builder`` defaults to the one captured by
+        :meth:`from_plan`; runtimes constructed directly from StageSpecs
+        must pass one.
+        """
+        builder = stage_fn_builder if stage_fn_builder is not None \
+            else self._builder
+        if builder is None:
+            raise ValueError(
+                "rebuild() needs a stage_fn_builder (none captured; "
+                "construct via from_plan or pass one explicitly)")
+        was_started = self._started
+        if was_started:
+            self.stop()
+        self._builder = builder
+        self.stages = self._specs_from_plan(plan, builder, self._power)
+        self._emit("rebuild", stages=[s.name for s in self.stages])
+        if was_started:
+            self.start()
+        return self
+
+    @classmethod
+    def from_plan(cls, plan, stage_fn_builder: Callable,
+                  queue_depth: int = 8, power=None,
+                  on_event: Callable[[str, dict], None] | None = None,
+                  ) -> "StreamingPipelineRuntime":
+        """Materialize stage workers from a PipelinePlan.
+
+        ``stage_fn_builder(start, end)`` returns the callable executing
+        chain tasks [start, end]; builders accepting a third parameter are
+        called as ``(start, end, stage)`` with the plan's Stage/FreqStage.
+        Passing a ``repro.energy.model.PowerModel`` as ``power`` enables
+        wall-clock energy metering: each run() reports ``energy_j``
+        (per-replica busy time at busy watts + allocated idle time at idle
+        watts) next to the measured period. The builder and power model
+        are captured so :meth:`rebuild` can re-materialize from a new
+        plan."""
+        rt = cls(cls._specs_from_plan(plan, stage_fn_builder, power),
+                 queue_depth=queue_depth, on_event=on_event)
+        rt._builder = stage_fn_builder
+        rt._power = power
+        return rt

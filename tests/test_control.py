@@ -1,0 +1,651 @@
+"""Adaptive runtime control (repro.control): budget traces, trace-fitted
+power calibration, the governor's trigger logic, per-core-type frequency
+ladders, runtime rebuild, and the end-to-end scenario acceptance."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.dvbs2 import (
+    RESOURCES,
+    budget_presets,
+    dvbs2_chain,
+    platform_power,
+)
+from repro.control import (
+    BatteryBudget,
+    ConstantBudget,
+    Governor,
+    Observation,
+    ScriptedBudget,
+    ThermalThrottleBudget,
+    TraceSample,
+    fit_power_model,
+    fit_report,
+    run_scenario,
+    sample_from_run,
+    synthesize_samples,
+)
+from repro.core import BIG, LITTLE, TaskChain
+from repro.core.dvfs import FreqSolution
+from repro.energy import (
+    POWER_APPLE_M1_ULTRA,
+    CoreTypePower,
+    PowerModel,
+    dvfs_frontier,
+    min_period_under_power,
+    normalize_freq_levels,
+    pareto_frontier,
+)
+from repro.pipeline import StageSpec, StreamingPipelineRuntime
+
+
+def small_chain() -> TaskChain:
+    return TaskChain(
+        w_big=[10.0, 40.0, 40.0, 10.0],
+        w_little=[25.0, 100.0, 100.0, 25.0],
+        replicable=[False, True, True, False],
+    )
+
+
+POWER = PowerModel("t", CoreTypePower(0.1, 0.9), CoreTypePower(0.03, 0.32))
+
+
+# ================================================================= budgets
+def test_constant_budget():
+    b = ConstantBudget(12.0)
+    assert b.cap_at(0.0) == b.cap_at(1e9) == 12.0
+    assert b.change_times() == ()
+    with pytest.raises(ValueError):
+        ConstantBudget(0.0)
+
+
+def test_scripted_budget_lookup_and_validation():
+    b = ScriptedBudget(((0.0, 30.0), (2.0, 20.0), (5.0, 10.0)))
+    assert b.cap_at(0.0) == 30.0
+    assert b.cap_at(1.99) == 30.0
+    assert b.cap_at(2.0) == 20.0
+    assert b.cap_at(4.0) == 20.0
+    assert b.cap_at(100.0) == 10.0
+    assert b.change_times() == (2.0, 5.0)
+    with pytest.raises(ValueError):
+        ScriptedBudget(())
+    with pytest.raises(ValueError):
+        ScriptedBudget(((1.0, 30.0),))          # must start at t=0
+    with pytest.raises(ValueError):
+        ScriptedBudget(((0.0, 30.0), (0.0, 20.0)))  # strictly ascending
+    with pytest.raises(ValueError):
+        ScriptedBudget(((0.0, -1.0),))
+
+
+def test_thermal_throttle_budget():
+    b = ThermalThrottleBudget(nominal_w=30.0, throttled_w=15.0,
+                              t_throttle=3.0, t_recover=6.0)
+    assert b.cap_at(0.0) == 30.0
+    assert b.cap_at(3.0) == 15.0
+    assert b.cap_at(5.9) == 15.0
+    assert b.cap_at(6.0) == 30.0
+    assert b.change_times() == (3.0, 6.0)
+    no_recover = ThermalThrottleBudget(30.0, 15.0, 3.0)
+    assert no_recover.cap_at(1e9) == 15.0
+    assert no_recover.change_times() == (3.0,)
+    with pytest.raises(ValueError):
+        ThermalThrottleBudget(30.0, 30.0, 3.0)   # throttled must be below
+    with pytest.raises(ValueError):
+        ThermalThrottleBudget(30.0, 15.0, 3.0, 2.0)  # recover after throttle
+
+
+def test_battery_budget_drain():
+    b = BatteryBudget(capacity_j=100.0, drain_w=10.0,
+                      levels=((0.6, 30.0), (0.3, 20.0), (0.0, 8.0)))
+    assert b.soc_at(0.0) == 1.0
+    assert b.soc_at(5.0) == pytest.approx(0.5)
+    assert b.soc_at(1e9) == 0.0
+    assert b.cap_at(0.0) == 30.0
+    assert b.cap_at(5.0) == 20.0       # SoC 0.5: below 0.6, above 0.3
+    assert b.cap_at(8.0) == 8.0        # SoC 0.2
+    assert b.cap_at(1e9) == 8.0
+    # SoC crosses 0.6 at t=4, 0.3 at t=7
+    assert b.change_times() == pytest.approx((4.0, 7.0))
+    with pytest.raises(ValueError):
+        BatteryBudget(100.0, 10.0, levels=((0.3, 30.0), (0.6, 20.0),
+                                           (0.0, 8.0)))  # not descending
+    with pytest.raises(ValueError):
+        BatteryBudget(100.0, 10.0, levels=((0.5, 30.0),))  # must end at 0.0
+    with pytest.raises(ValueError):
+        BatteryBudget(100.0, 10.0, levels=((0.5, 10.0), (0.0, 30.0)))
+        # caps rising as battery dies
+
+
+# ============================================================= calibration
+def test_calibration_round_trip_exact():
+    truth = POWER_APPLE_M1_ULTRA
+    utils = [(0.1, 0.9), (0.9, 0.1), (0.5, 0.5), (0.2, 0.2), (1.0, 0.0),
+             (0.0, 1.0), (0.7, 0.3)]
+    samples = synthesize_samples(truth, utils, window_s=2.0,
+                                 cores=[(4, 2), (2, 4), (6, 1)])
+    fitted = fit_power_model(samples)
+    for v in (BIG, LITTLE):
+        assert fitted.idle_watts(v) == pytest.approx(
+            truth.idle_watts(v), rel=1e-6)
+        assert fitted.busy_watts(v) == pytest.approx(
+            truth.busy_watts(v), rel=1e-6)
+    report = fit_report(samples, fitted)
+    assert report["rel_rms"] < 1e-9
+
+
+def test_calibration_round_trip_noisy():
+    truth = POWER_APPLE_M1_ULTRA
+    rng = np.random.default_rng(7)
+    utils = [(rng.uniform(), rng.uniform()) for _ in range(60)]
+    samples = synthesize_samples(truth, utils, noise=0.02, rng=rng,
+                                 cores=[(8, 2), (4, 4), (2, 8), (6, 6)])
+    fitted = fit_power_model(samples)
+    for v in (BIG, LITTLE):
+        assert fitted.busy_watts(v) == pytest.approx(
+            truth.busy_watts(v), rel=0.1)
+
+
+def test_calibration_recovers_dvfs_dynamic_watts():
+    """Busy time recorded at level f weights the dynamic term by f^3."""
+    truth = POWER_APPLE_M1_ULTRA
+    utils = [(0.2, 0.8), (0.8, 0.2), (0.5, 0.5), (1.0, 0.3), (0.3, 1.0)]
+    samples = synthesize_samples(truth, utils, freqs=(0.6, 0.8),
+                                 cores=[(4, 4), (2, 6), (6, 2)])
+    fitted = fit_power_model(samples)
+    assert fitted.core(BIG).dynamic_watts == pytest.approx(
+        truth.core(BIG).dynamic_watts, rel=1e-6)
+    assert fitted.core(LITTLE).dynamic_watts == pytest.approx(
+        truth.core(LITTLE).dynamic_watts, rel=1e-6)
+
+
+def test_calibration_rejects_degenerate_traces():
+    truth = POWER_APPLE_M1_ULTRA
+    same = synthesize_samples(truth, [(0.5, 0.5)] * 6)
+    with pytest.raises(ValueError, match="rank-deficient"):
+        fit_power_model(same)
+    with pytest.raises(ValueError, match="at least two"):
+        fit_power_model(synthesize_samples(truth, [(0.5, 0.5)]))
+
+
+def test_trace_sample_validation():
+    with pytest.raises(ValueError, match="busy core-seconds exceed"):
+        TraceSample({BIG: 1.0}, {(BIG, 1.0): 2.0}, 1.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        TraceSample({BIG: -1.0}, {}, 1.0)
+    with pytest.raises(ValueError, match="positive"):
+        TraceSample({BIG: 1.0}, {(BIG, 0.0): 0.5}, 1.0)
+
+
+def test_sample_from_metered_run_fits_runtime_watts():
+    """The recorded-trace path: meter real runs at two utilizations and
+    fit; the fitted big-core watts must be in the ballpark of the spec's
+    (single-core-type traces can't identify the little coefficients)."""
+    def make_rt(sleep_s):
+        return StreamingPipelineRuntime([
+            StageSpec("s", lambda x: (time.sleep(sleep_s), x)[1],
+                      replicas=2, device_class="big",
+                      busy_watts=5.0, idle_watts=0.5),
+        ])
+    samples = []
+    for sleep_s in (0.004, 0.001):
+        rt = make_rt(sleep_s).start()
+        stats = rt.run(list(range(30)))
+        rt.stop()
+        samples.append(sample_from_run(rt.stages, stats))
+    fitted = fit_power_model(samples)
+    assert fitted.busy_watts(BIG) == pytest.approx(5.0, rel=0.35)
+    with pytest.raises(ValueError, match="energy_j"):
+        sample_from_run([], {"total_s": 1.0, "busy_s": {}})
+
+
+# ==================================================== power-capped queries
+def test_min_period_under_power_picks_fastest_admissible():
+    ch = small_chain()
+    front = pareto_frontier(ch, 3, 2, POWER)
+    assert len(front) >= 2
+    watts = [pt.energy / pt.period for pt in front]
+    # watts strictly decrease along the frontier
+    assert all(w1 > w2 for w1, w2 in zip(watts, watts[1:]))
+    cap = watts[1] * 1.001
+    pt = min_period_under_power(ch, 3, 2, POWER, cap)
+    assert pt == front[1]  # faster points all exceed the cap
+    assert min_period_under_power(ch, 3, 2, POWER, watts[0] + 1.0) == front[0]
+    assert min_period_under_power(ch, 3, 2, POWER, watts[-1] * 0.5) is None
+
+
+def test_min_period_under_power_dvfs_and_frontier_passthrough():
+    ch = small_chain()
+    power = PowerModel("d", POWER.big, POWER.little,
+                       freq_levels=(0.5, 0.75, 1.0))
+    front = dvfs_frontier(ch, 3, 2, power)
+    pt = min_period_under_power(ch, 3, 2, power, front[0].energy
+                                / front[0].period + 1.0, dvfs=True)
+    assert isinstance(pt.solution, FreqSolution)
+    # passthrough: a precomputed frontier is used as-is
+    assert min_period_under_power(ch, 3, 2, power, 1e9,
+                                  frontier=front) is front[0]
+
+
+def test_planner_power_cap_entry_point():
+    from repro.models.config import get_config
+    from repro.pipeline import HeterogeneousSystem, plan_pipeline
+
+    cfg = get_config("stablelm-3b")
+    sys_ = HeterogeneousSystem.default(4, 4)
+    free = plan_pipeline(cfg, system=sys_, tokens_per_step=32)
+    report = free.energy_report(sys_)
+    capped = plan_pipeline(cfg, system=sys_, tokens_per_step=32,
+                           power_cap_w=report.avg_watts * 0.5)
+    capped_report = capped.energy_report(sys_)
+    assert capped_report.avg_watts <= report.avg_watts * 0.5 + 1e-9
+    assert capped.period_us >= free.period_us - 1e-9
+    with pytest.raises(ValueError, match="fits under"):
+        plan_pipeline(cfg, system=sys_, tokens_per_step=32,
+                      power_cap_w=1e-6)
+
+
+# ======================================================= governor triggers
+def _steady_obs(gov, t):
+    return Observation(t=t, period=gov.plan.predicted_period)
+
+
+def test_governor_steady_state_never_replans():
+    ch = small_chain()
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(1000.0))
+    start = gov.start()
+    assert start.trigger == "start" and start.cap_met
+    for t in range(1, 20):
+        assert gov.observe(_steady_obs(gov, float(t))) is None
+    assert gov.replans == []
+
+
+def test_governor_cap_drop_replans_from_frontier():
+    ch = small_chain()
+    front = pareto_frontier(ch, 3, 2, POWER)
+    watts = [pt.energy / pt.period for pt in front]
+    budget = ScriptedBudget(((0.0, watts[0] + 1.0), (5.0, watts[1] * 1.001)))
+    gov = Governor(ch, 3, 2, POWER, budget)
+    assert gov.start().plan.point == front[0]
+    assert gov.observe(_steady_obs(gov, 1.0)) is None
+    ev = gov.observe(_steady_obs(gov, 5.0))
+    assert ev is not None and ev.trigger == "cap" and ev.cap_met
+    # the re-plan is exactly the frontier query under the new cap
+    assert ev.plan.point == front[1]
+    assert ev.plan.predicted_watts <= budget.cap_at(5.0) + 1e-9
+    # and it fired exactly once
+    assert gov.observe(_steady_obs(gov, 6.0)) is None
+    assert len(gov.replans) == 1
+
+
+def test_governor_drift_triggers_recalibration_exactly_once():
+    ch = small_chain()
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(1000.0),
+                   drift_tolerance=0.25)
+    gov.start()
+    p0 = gov.plan.predicted_period
+    # the workload actually runs 40% slower than the table says
+    for t in range(1, 10):
+        gov.observe(Observation(t=float(t), period=p0 * 1.4))
+    drifts = [e for e in gov.events if e.trigger == "drift"]
+    assert len(drifts) == 1
+    assert gov.calibration_scale == pytest.approx(1.4)
+    # predictions recalibrated: the measured period now matches
+    assert gov.plan.predicted_period == pytest.approx(p0 * 1.4)
+    # within-tolerance wobble never re-triggers
+    gov.observe(Observation(t=20.0, period=p0 * 1.4 * 1.1))
+    assert len(gov.replans) == 1
+
+
+def test_governor_ignores_drift_from_lossy_windows():
+    """A window that lost frames to the liveness deadline measured a
+    stalled pipeline, not the workload: its (wildly inflated) period must
+    never rescale the chain."""
+    ch = small_chain()
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(1000.0))
+    gov.start()
+    p0 = gov.plan.predicted_period
+    assert gov.observe(Observation(t=1.0, period=p0 * 10.0,
+                                   frames=3, dropped=27)) is None
+    assert gov.calibration_scale == 1.0
+    assert gov.replans == []
+    # the same period from a clean window IS drift
+    ev = gov.observe(Observation(t=2.0, period=p0 * 10.0, frames=30))
+    assert ev is not None and ev.trigger == "drift"
+
+
+def test_governor_device_loss_shrinks_pool():
+    ch = small_chain()
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(1000.0))
+    gov.start()
+    ev = gov.device_loss(2.0, little=2)
+    assert ev.trigger == "device_loss"
+    assert (gov.b, gov.l) == (3, 0)
+    used_b, used_l = ev.plan.solution.core_usage()
+    assert used_l == 0 and used_b <= 3
+    with pytest.raises(ValueError):
+        gov.device_loss(3.0, big=5)
+    with pytest.raises(ValueError):
+        gov.device_loss(3.0)
+
+
+def test_governor_infeasible_cap_falls_back_to_min_power():
+    ch = small_chain()
+    front = pareto_frontier(ch, 3, 2, POWER)
+    min_watts = front[-1].energy / front[-1].period
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(min_watts * 0.5))
+    ev = gov.start()
+    assert not ev.cap_met
+    assert ev.plan.point == front[-1]
+    # a persistently infeasible cap must not spam identical re-plan
+    # events every tick: the fallback already IS the active plan
+    for t in range(1, 6):
+        assert gov.observe(_steady_obs(gov, float(t))) is None
+    assert gov.replans == []
+
+
+def test_governor_upshifts_when_cap_recovers():
+    ch = small_chain()
+    front = pareto_frontier(ch, 3, 2, POWER)
+    watts = [pt.energy / pt.period for pt in front]
+    budget = ThermalThrottleBudget(nominal_w=watts[0] + 1.0,
+                                   throttled_w=watts[-1] * 1.001,
+                                   t_throttle=2.0, t_recover=6.0)
+    gov = Governor(ch, 3, 2, POWER, budget)
+    gov.start()
+    gov.observe(_steady_obs(gov, 2.0))   # throttle: downshift
+    assert gov.plan.point == front[-1]
+    ev = gov.observe(_steady_obs(gov, 6.0))  # recovery: upshift
+    assert ev is not None and ev.trigger == "cap"
+    assert ev.plan.point == front[0]
+    assert [e.trigger for e in gov.replans] == ["cap", "cap"]
+
+
+def test_governor_misuse_raises():
+    ch = small_chain()
+    gov = Governor(ch, 3, 2, POWER, ConstantBudget(10.0))
+    with pytest.raises(RuntimeError, match="not started"):
+        gov.observe(Observation(t=0.0, period=1.0))
+    gov.start()
+    with pytest.raises(RuntimeError, match="already started"):
+        gov.start()
+
+
+# ==================================================== per-core-type ladders
+def test_normalize_freq_levels_mapping_and_aliases():
+    norm = normalize_freq_levels({"big": (1.0, 0.5), "little": (0.75, 1.0)})
+    assert norm == {BIG: (1.0, 0.5), LITTLE: (0.75, 1.0)}
+    assert normalize_freq_levels((0.5, 1.0)) == (0.5, 1.0)
+    with pytest.raises(ValueError, match="missing"):
+        normalize_freq_levels({"big": (1.0,)})
+    with pytest.raises(ValueError, match="unknown core type"):
+        normalize_freq_levels({"big": (1.0,), "medium": (1.0,),
+                               "little": (1.0,)})
+    with pytest.raises(ValueError, match="positive"):
+        normalize_freq_levels({"big": (0.0,), "little": (1.0,)})
+    with pytest.raises(ValueError, match="positive"):
+        normalize_freq_levels(())
+
+
+def test_power_model_per_class_ladders():
+    pm = PowerModel("p", POWER.big, POWER.little,
+                    freq_levels={"big": (0.6, 1.0), "little": (0.8, 1.0)})
+    assert pm.levels_for(BIG) == (0.6, 1.0)
+    assert pm.levels_for("little") == (0.8, 1.0)
+    shared = PowerModel("s", POWER.big, POWER.little,
+                        freq_levels=(0.5, 1.0))
+    assert shared.levels_for(BIG) == shared.levels_for(LITTLE) == (0.5, 1.0)
+    with pytest.raises(ValueError):
+        pm.levels_for("X")
+
+
+def test_dvfs_tables_per_class_grid():
+    from repro.core.dvfs import dvfs_tables
+
+    ch = small_chain()
+    tables = dvfs_tables(ch, 2, 1, {BIG: (0.5, 1.0), LITTLE: (1.0,)})
+    assert set(tables) == {(0.5, 1.0), (1.0, 1.0)}
+    with pytest.raises(ValueError, match="unknown core types"):
+        dvfs_tables(ch, 2, 1, {"X": (1.0,)})
+    with pytest.raises(ValueError, match="missing"):
+        dvfs_tables(ch, 2, 1, {BIG: (0.5, 1.0)})  # partial mapping is a bug
+
+
+def test_per_class_ladders_respected_by_dp_and_frontier():
+    ch = small_chain()
+    ladders = {BIG: (0.6, 0.8, 1.0), LITTLE: (0.75, 1.0)}
+    pm = PowerModel("p", POWER.big, POWER.little, freq_levels=ladders)
+    from repro.energy import freqherad, min_energy_under_period_freq
+
+    fsol = freqherad(ch, 3, 2, power=pm)
+    assert not fsol.is_empty()
+    for st in fsol.stages:
+        assert st.freq in ladders[st.ctype]
+    p_relaxed = fsol.period(ch) * 2.0
+    fsol2 = min_energy_under_period_freq(ch, 3, 2, p_relaxed, pm)
+    for st in fsol2.stages:
+        assert st.freq in ladders[st.ctype]
+    for pt in dvfs_frontier(ch, 3, 2, pm):
+        sol = pt.solution
+        if isinstance(sol, FreqSolution):
+            for st in sol.stages:
+                assert st.freq in ladders[st.ctype]
+
+
+def test_shared_ladder_equals_symmetric_mapping():
+    """Backward compat: one shared tuple == the same ladder for both."""
+    ch = small_chain()
+    from repro.energy import freqherad
+
+    shared = PowerModel("s", POWER.big, POWER.little,
+                        freq_levels=(0.5, 0.75, 1.0))
+    mapped = PowerModel("m", POWER.big, POWER.little,
+                        freq_levels={BIG: (0.5, 0.75, 1.0),
+                                     LITTLE: (0.5, 0.75, 1.0)})
+    assert freqherad(ch, 3, 2, power=shared) \
+        == freqherad(ch, 3, 2, power=mapped)
+
+
+# ========================================================== runtime rebuild
+def test_runtime_stop_terminates_all_stages_quickly():
+    rt = StreamingPipelineRuntime([
+        StageSpec("a", lambda x: x + 1, replicas=2),
+        StageSpec("b", lambda x: x * 2, replicas=3),
+        StageSpec("c", lambda x: x - 1),
+    ]).start()
+    rt.run(list(range(20)))
+    threads = list(rt._threads)
+    t0 = time.perf_counter()
+    rt.stop()
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 1.0  # was ~2 s x threads before sentinel propagation
+    assert all(not t.is_alive() for t in threads)
+
+
+def test_runtime_rebuild_preserves_sequence_ids():
+    from repro.core import herad
+
+    ch = small_chain()
+
+    class Plan:
+        chain = ch
+
+        def __init__(self, sol):
+            self.solution = sol
+
+    events = []
+    rt = StreamingPipelineRuntime.from_plan(
+        Plan(herad(ch, 3, 2)), lambda s, e: (lambda x: (x[0] + 1, x[1])),
+        on_event=lambda name, payload: events.append(name))
+    rt.start()
+    frames = [(0, i) for i in range(12)]
+    r1 = rt.run(frames)
+    n_stages1 = len(rt.stages)
+    rt.rebuild(Plan(herad(ch, 1, 1)))
+    r2 = rt.run(frames)
+    rt.stop()
+    # each stage fn bumps the hop counter once: frames crossed every stage
+    assert r1["outputs"] == [(n_stages1, i) for i in range(12)]
+    assert r2["outputs"] == [(len(rt.stages), i) for i in range(12)]
+    assert r1["seq_ids"] == list(range(12))
+    assert r2["seq_ids"] == list(range(12, 24))  # counter survives rebuild
+    assert "rebuild" in events and events.count("start") == 2
+
+
+def test_runtime_rebuild_requires_builder():
+    rt = StreamingPipelineRuntime([StageSpec("s", lambda x: x)])
+    with pytest.raises(ValueError, match="stage_fn_builder"):
+        rt.rebuild(object())
+
+
+def test_stage_builder_arity_dispatch():
+    """Only positional parameters select the (start, end, stage) call:
+    **kwargs / keyword-only builders keep the 2-arg form, *args gets the
+    stage."""
+    from repro.core import herad
+
+    ch = small_chain()
+
+    class Plan:
+        chain = ch
+        solution = herad(ch, 3, 2)
+
+    calls = []
+
+    def kw_builder(start, end, **opts):
+        calls.append(("kw", start, end))
+        return lambda x: x
+
+    def kwonly_builder(start, end, *, scale=1.0):
+        calls.append(("kwonly", start, end))
+        return lambda x: x
+
+    def star_builder(*args):
+        calls.append(("star", len(args)))
+        return lambda x: x
+
+    for builder in (kw_builder, kwonly_builder, star_builder):
+        StreamingPipelineRuntime.from_plan(Plan, builder)
+    assert {c[0] for c in calls} == {"kw", "kwonly", "star"}
+    # *args receives the stage object; the others keep the 2-arg call
+    assert all(c == ("star", 3) for c in calls if c[0] == "star")
+
+
+def test_run_timeout_reports_dropped_frames():
+    """A stage that never emits must surface as dropped frames at the
+    deadline, not a hung run — the liveness check behind the scenario
+    harness's frames_dropped metric."""
+    rt = StreamingPipelineRuntime([
+        StageSpec("stuck", lambda x: (time.sleep(60.0), x)[1]),
+    ]).start()
+    t0 = time.perf_counter()
+    stats = rt.run(list(range(3)), timeout_s=0.2)
+    assert time.perf_counter() - t0 < 5.0
+    assert stats["frames_dropped"] == 3
+    assert stats["outputs"] == []
+    rt._threads = []  # workers are wedged in sleep; don't join them
+
+
+def test_run_flushes_stale_sink_items():
+    """Leftovers from a timed-out run (abort sentinel or straggler
+    frames) must not be miscounted as the next batch's output."""
+    rt = StreamingPipelineRuntime([StageSpec("ok", lambda x: x)]).start()
+    from repro.pipeline.runtime import _Sentinel
+    rt._queues[-1].put(_Sentinel())     # orphaned abort marker
+    rt._queues[-1].put((999, "stale"))  # straggler from a dead batch
+    stats = rt.run(list(range(5)), timeout_s=10.0)
+    rt.stop()
+    assert stats["frames_dropped"] == 0
+    assert stats["outputs"] == list(range(5))
+
+
+# =============================================================== presets
+def test_budget_presets_shapes():
+    presets = budget_presets("mac", "half", horizon_s=9.0)
+    hi, mid, low = presets["_levels"]
+    assert hi > mid > low > 0
+    assert presets["constant"].cap_at(0.0) == hi
+    battery = presets["battery"]
+    assert battery.cap_at(0.0) == hi
+    assert battery.cap_at(1e9) == low
+    assert len(battery.change_times()) == 2
+    thermal = presets["thermal"]
+    assert thermal.cap_at(0.0) == thermal.cap_at(8.9) == hi
+    assert thermal.cap_at(4.0) == mid
+
+
+# ===================================================== end-to-end scenarios
+@pytest.mark.slow
+def test_battery_drain_scenario_acceptance():
+    """The PR's acceptance bar, asserted: on the DVB-S2 mac preset a
+    battery-drain trace forces >= 2 re-plans, every window's measured
+    power respects the then-current cap, and measured periods stay within
+    25% of the frontier prediction for the active plan."""
+    platform = "mac"
+    chain = dvbs2_chain(platform)
+    power = platform_power(platform)
+    b, l = RESOURCES[platform]["half"]
+    budget = budget_presets(platform, "half", horizon_s=9.0)["battery"]
+    # wide drift tolerance: this scenario isolates the cap trigger, so a
+    # loaded host must not inject spurious drift re-plans
+    gov = Governor(chain, b, l, power, budget, drift_tolerance=0.6)
+    res = run_scenario(gov, time_scale=4e-6, n_windows=9, window_dt=1.0,
+                       frames_per_window=30)
+    assert len(res.replans) >= 2
+    assert res.frames_dropped < 2
+    caps_seen = {w.cap_w for w in res.windows}
+    assert len(caps_seen) == 3  # all three battery levels exercised
+    for w in res.windows:
+        assert w.measured_watts <= w.cap_w * 1.02 + 1e-9, \
+            f"window {w.index} over cap"
+        assert w.period_error <= 0.25, \
+            f"window {w.index} period error {w.period_error:.1%}"
+    # every adopted plan is admissible under its trigger-time cap
+    for e in res.events:
+        assert e.cap_met
+        assert e.plan.predicted_watts <= e.cap_w + 1e-9
+
+
+@pytest.mark.slow
+def test_cap_drop_and_core_loss_scenario():
+    """Survival: an operator cap drop plus losing a little core, with the
+    sequence-ordered output stream intact (< 2 dropped frames)."""
+    platform = "mac"
+    chain = dvbs2_chain(platform)
+    power = platform_power(platform)
+    b, l = RESOURCES[platform]["half"]
+    hi, mid, _ = budget_presets(platform, "half")["_levels"]
+    gov = Governor(chain, b, l, power,
+                   ScriptedBudget(((0.0, hi), (2.0, mid))),
+                   drift_tolerance=0.6)
+    res = run_scenario(gov, time_scale=4e-6, n_windows=6, window_dt=1.0,
+                       frames_per_window=30, device_loss_at={4: (0, 1)})
+    assert [e.trigger for e in res.replans] == ["cap", "device_loss"]
+    assert res.frames_dropped < 2
+    assert gov.l == l - 1
+    for w in res.windows:
+        assert w.measured_watts <= w.cap_w * 1.02 + 1e-9
+        assert w.period_error <= 0.25
+
+
+@pytest.mark.slow
+def test_drift_scenario_end_to_end():
+    """Inject a 1.5x slowdown into the simulated stages mid-run: the
+    governor must recalibrate exactly once and predictions must match the
+    measured period again afterwards."""
+    platform = "mac"
+    chain = dvbs2_chain(platform)
+    power = platform_power(platform)
+    b, l = RESOURCES[platform]["half"]
+    front = pareto_frontier(chain, b, l, power)
+    mid_watts = front[len(front) // 2].energy / front[len(front) // 2].period
+    gov = Governor(chain, b, l, power, ConstantBudget(mid_watts * 1.01),
+                   drift_tolerance=0.25)
+    res = run_scenario(gov, time_scale=4e-6, n_windows=8, window_dt=1.0,
+                       frames_per_window=30, drift_at=((3, 1.5),))
+    drifts = [e for e in res.events if e.trigger == "drift"]
+    assert len(drifts) == 1
+    assert gov.calibration_scale == pytest.approx(1.5, rel=0.15)
+    # post-recalibration windows predict the slowed workload accurately
+    post = [w for w in res.windows if w.index >= 5]
+    assert post and all(w.period_error <= 0.25 for w in post)
