@@ -53,6 +53,7 @@ from repro.core.chain import BIG, LITTLE, Solution, TaskChain
 from repro.core.dvfs import FreqSolution
 from repro.energy.model import PowerModel
 from repro.energy.pareto import (
+    CandidateTable,
     ParetoPoint,
     dvfs_frontier,
     min_period_under_power,
@@ -167,6 +168,10 @@ class Governor:
         self.events: list[GovernorEvent] = []
         self.calibration_scale = 1.0   # cumulative drift recalibration
         self._frontier: list[ParetoPoint] | None = None
+        # the (stage, type, level) candidate table shared across every
+        # frontier rebuild: budgets are per-query, so device loss reuses
+        # it as-is; drift recalibration only rescales the weights
+        self._candidates: CandidateTable | None = None
         self._plan: ActivePlan | None = None
         self._last_cap: float | None = None
 
@@ -190,14 +195,29 @@ class Governor:
 
     def frontier(self) -> list[ParetoPoint]:
         """The cached (period, energy) frontier for the current pool and
-        (possibly recalibrated) chain."""
+        (possibly recalibrated) chain.
+
+        Rebuilds share one :class:`~repro.energy.pareto.CandidateTable`:
+        the (stage, type, level) candidate precomputation is reused across
+        every re-plan — device loss queries it at the shrunken budgets,
+        drift recalibration rescales only the chain weights
+        (:meth:`CandidateTable.rescale`) — so governor re-planning stays
+        on the vectorized fast path end to end.
+        """
         if self._frontier is None:
+            if self._candidates is None:
+                self._candidates = CandidateTable.build(
+                    self.chain, self.power,
+                    (self.freq_levels if self.freq_levels is not None
+                     else self.power.freq_levels) if self.dvfs else (1.0,))
             if self.dvfs:
                 self._frontier = dvfs_frontier(
-                    self.chain, self.b, self.l, self.power, self.freq_levels)
+                    self.chain, self.b, self.l, self.power, self.freq_levels,
+                    candidates=self._candidates)
             else:
                 self._frontier = pareto_frontier(
-                    self.chain, self.b, self.l, self.power)
+                    self.chain, self.b, self.l, self.power,
+                    candidates=self._candidates)
             if not self._frontier:
                 raise RuntimeError(
                     f"no feasible schedule at all on b={self.b}, l={self.l}")
@@ -270,7 +290,11 @@ class Governor:
             > self.drift_tolerance
 
     def _recalibrate(self, ratio: float):
-        """Rescale chain weights so predictions match measurements."""
+        """Rescale chain weights so predictions match measurements.
+
+        The cached candidate table survives the recalibration: only its
+        weight-derived arrays are rebuilt on the rescaled chain — ladders,
+        power constants, and replicability structure carry over."""
         self.calibration_scale *= ratio
         self.chain = TaskChain(
             w_big=self.chain.w[BIG] * ratio,
@@ -278,6 +302,8 @@ class Governor:
             replicable=self.chain.replicable,
             names=self.chain.names,
         )
+        if self._candidates is not None:
+            self._candidates = self._candidates.rescale(self.chain)
         self._frontier = None
 
     def _select(self, cap: float) -> ParetoPoint | None:

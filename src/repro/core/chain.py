@@ -99,6 +99,30 @@ class TaskChain:
             return total / r
         return total
 
+    # --------------------------------------------------- vectorized interval views
+    def stage_sum_matrix(self, v: str) -> np.ndarray:
+        """All interval sums at once: ``M[s, e] = stage_sum(s, e, v)``.
+
+        An (n, n) float64 array built from the same prefix sums
+        :meth:`stage_sum` reads, so ``M[s, e]`` is bit-identical to the
+        scalar call for every s <= e (entries with s > e are meaningless).
+        This is the input of the energy layer's vectorized candidate
+        tables (repro.energy.pareto), which cost every (stage, core type,
+        frequency) candidate in one numpy expression instead of O(n^2)
+        scalar calls.
+        """
+        pre = self._pre[v]
+        return pre[1:][None, :] - pre[:-1][:, None]
+
+    def rep_matrix(self) -> np.ndarray:
+        """All replicability flags at once: ``R[s, e] = is_rep(s, e)``.
+
+        (n, n) bool array from the sequential-task prefix counts backing
+        :meth:`is_rep`; entries with s > e are meaningless.
+        """
+        sc = self._seq_count
+        return (sc[1:][None, :] - sc[:-1][:, None]) == 0
+
     # ------------------------------------------------------------- utilities
     def max_weight(self, v: str) -> float:
         return float(self.w[v].max())

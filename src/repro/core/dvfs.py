@@ -38,7 +38,7 @@ import math
 from typing import Iterable, Mapping
 
 from .chain import BIG, LITTLE, Solution, Stage, TaskChain
-from .herad import _Matrix, extract_solution, herad_table
+from .herad import _Matrix, extract_solution, herad_tables
 
 
 def scale_chain(chain: TaskChain, f_big: float = 1.0,
@@ -215,12 +215,16 @@ def dvfs_tables(
     """Frequency-indexed HeRAD tables over the (f_big, f_little) grid.
 
     For every profile in the cross product of ``freq_levels`` (deduplicated,
-    ascending) this runs the vectorized HeRAD DP (``herad_table``) on the
-    1/f-scaled chain. ``freq_levels`` is one ladder shared by both core
-    types, or a ``{BIG: ladder, LITTLE: ladder}`` mapping when the types
-    expose different OPP tables — the grid is then the cross product of
-    the two per-type ladders. Each entry maps the profile to its filled
-    solution matrix plus the scaled chain it was computed on, ready for
+    ascending) this runs the vectorized HeRAD DP on the 1/f-scaled chain —
+    all profiles fill through ONE stacked ``herad_tables`` pass, since the
+    scaled chains share the replicable structure. ``freq_levels`` is one
+    ladder shared by both core types, or a ``{BIG: ladder, LITTLE: ladder}``
+    mapping when the types expose different OPP tables — the grid is then
+    the cross product of the two per-type ladders. Each ladder is
+    deduplicated up front, so ladder specs carrying repeated levels never
+    fill or sweep a (f_big, f_little) profile twice. Each entry maps the
+    profile to its filled solution matrix plus
+    the scaled chain it was computed on, ready for
     :func:`extract_dvfs_solution` — which, like plain ``extract_solution``,
     can read out the optimum for ANY sub-budget (b', l') <= (b, l). The
     energy layer sweeps this (budget x budget x profile) cube to build
@@ -241,12 +245,13 @@ def dvfs_tables(
         little_levels = _ladder(freq_levels[LITTLE])
     else:
         big_levels = little_levels = _ladder(freq_levels)
-    tables: dict[tuple[float, float], tuple[_Matrix, TaskChain]] = {}
-    for fb in big_levels:
-        for fl in little_levels:
-            scaled = scale_chain(chain, fb, fl)
-            tables[(fb, fl)] = (herad_table(scaled, b, l), scaled)
-    return tables
+    # _ladder deduped both axes, so the cross product has no repeats
+    profiles = [(fb, fl) for fb in big_levels for fl in little_levels]
+    scaled_chains = [scale_chain(chain, fb, fl) for fb, fl in profiles]
+    matrices = herad_tables(scaled_chains, b, l)
+    return {profile: (matrix, scaled)
+            for profile, matrix, scaled
+            in zip(profiles, matrices, scaled_chains)}
 
 
 def extract_dvfs_solution(

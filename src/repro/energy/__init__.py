@@ -36,14 +36,19 @@ from .account import (  # noqa: F401
     energy_report,
 )
 from .pareto import (  # noqa: F401
+    CandidateTable,
     ParetoPoint,
     dvfs_frontier,
     energad,
     freqherad,
     min_energy_under_period,
     min_energy_under_period_freq,
+    min_energy_under_period_freq_reference,
+    min_energy_under_period_reference,
     min_period_under_power,
     pareto_frontier,
     sweep_budgets,
     sweep_budgets_freq,
+    sweep_budgets_freq_reference,
+    sweep_budgets_reference,
 )

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.chain import Solution, Stage, TaskChain
 from repro.core.dvfs import FreqSolution, FreqStage
 
@@ -32,14 +34,19 @@ def stage_energy_terms(
 ) -> tuple[float, float]:
     """(busy, idle) energy of one stage per frame at operating ``period``.
 
-    Single source of truth for the stage cost — used by both the
-    accounting report below and the energad DP (repro.energy.pareto), so
-    the DP's objective and the reported energy cannot drift apart. The
-    idle term is clamped at zero: required_cores' ceil epsilon can let
-    ``cores * period`` undershoot ``work`` by a rounding hair.
+    Single source of truth for the stage cost — used by the accounting
+    report below, the scalar energad/freqherad reference DPs, and the
+    vectorized candidate tables (repro.energy.pareto), so the DP's
+    objective and the reported energy cannot drift apart. ``work`` and
+    ``cores`` may be numpy arrays (one entry per candidate stage); the
+    elementwise float operations are identical to the scalar ones, which
+    is what keeps the vectorized kernels bit-compatible with these
+    scalars. The idle term is clamped at zero: required_cores' ceil
+    epsilon can let ``cores * period`` undershoot ``work`` by a rounding
+    hair.
     """
     busy = work * power.busy_watts(ctype, freq)
-    idle = max(cores * period - work, 0.0) * power.idle_watts(ctype)
+    idle = np.maximum(cores * period - work, 0.0) * power.idle_watts(ctype)
     return busy, idle
 
 

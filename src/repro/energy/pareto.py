@@ -1,71 +1,76 @@
 """(period, energy) Pareto frontiers, energy-constrained and DVFS-aware
-scheduling.
+scheduling — vectorized budget-plane kernels with scalar reference oracles.
 
 Units follow the chain: task weights are in the chain's time unit (µs for
 the DVB-S2 tables), powers in watts, so energies are watt x time-unit
 (µJ per frame for µs chains) and periods are in the same unit as weights.
 
-Three complementary tools on top of the HeRAD dynamic program:
+This module is the planning layer the runtime governor re-plans through
+(``repro.control``), so every entry point is built as a *fast path*,
+mirroring the lexicographic-min-as-elementwise-select recipe documented in
+``repro.core.herad``. Kernel layout:
 
-- :func:`sweep_budgets` / :func:`pareto_frontier`: HeRAD's solution matrix
-  already contains the period-optimal schedule for EVERY sub-budget
-  (b', l') <= (b, l); a single DP run plus O(b*l) O(n) extractions
-  enumerates the whole budget plane. Filtering the resulting
+- :class:`CandidateTable`: the (stage interval, core type, frequency)
+  candidate precomputation shared by every period-bound query. Interval
+  sums and replicability come from one vectorized prefix-sum expression
+  (``TaskChain.stage_sum_matrix`` / ``rep_matrix``); a query at ``p_max``
+  prices all candidates at once with the same
+  :func:`repro.energy.account.stage_energy_terms` arithmetic the
+  accounting report uses. Frontier refinement and governor re-planning
+  reuse one table across all ``p_max`` queries; drift recalibration only
+  rescales the weights (:meth:`CandidateTable.rescale`).
+
+- :func:`min_energy_under_period` / :func:`min_energy_under_period_freq`
+  (strategy names ``"energad"`` / ``"freqherad"``): exact min-sum DPs over
+  the ``(b+1, l+1)`` budget plane. For a fixed operating period the energy
+  of a schedule is additive over stages (see repro.energy.account), so the
+  optimal substructure of Eq. (4) carries over with min-sum replacing
+  min-max; each candidate stage is a shift-add of the predecessor plane
+  (``E[j][ub, ul] = min(E[i-1][ub-db, ul-dl] + cost)``) instead of the
+  former Python ``for pb / for pl`` loops. The scalar implementations are
+  retained as ``*_reference`` oracles; the vectorized DPs replay their
+  float operations and candidate enumeration order exactly, so schedules,
+  energies, and tie-breaking are bit-identical.
+
+- :func:`sweep_budgets` / :func:`sweep_budgets_freq`: HeRAD's solution
+  matrix already contains the period-optimal schedule for EVERY sub-budget
+  (b', l') <= (b, l); the sweeps cost all of them straight from the DP
+  field arrays (``repro.core.herad.plane_merged_stages`` walks every
+  cell's merged stage sequence in lockstep) instead of extracting a
+  ``Solution`` per cell. :class:`ParetoPoint.solution` is *lazy*: real
+  schedule objects are only materialized for the points something actually
+  reads — in practice the frontier survivors. Filtering the resulting
   (period, energy) cloud to its non-dominated subset yields the trade-off
-  frontier the paper's Section VII discusses qualitatively (heterogeneous
-  schedules beat the best homogeneous ones in energy by ~8%).
+  frontier of the paper's Section VII (heterogeneous schedules beat the
+  best homogeneous ones in energy by ~8%).
 
-- :func:`min_energy_under_period` (strategy name ``"energad"``): an exact
-  dynamic program minimizing energy subject to a period bound P_max. It
-  extends ChooseBestSolution's (Algo. 6) core-count tie-breaking into a
-  true energy objective: instead of "prefer trading big cores for little
-  ones", stages are costed in joules. For a fixed operating period the
-  energy of a schedule is additive over stages (see repro.energy.account),
-  so the optimal substructure of Eq. (4) carries over with min-sum
-  replacing min-max:
+- :func:`pareto_frontier` / :func:`dvfs_frontier`: the non-dominated
+  subset, optionally re-optimized per surviving period level by the exact
+  DP — all refinement queries share one :class:`CandidateTable`.
 
-      E*(j, b, l) = min over stage starts i, core types v of
-                    E*(i-1, b - u, l) + cost([i, j], u, B)
-                    E*(i-1, b, l - u) + cost([i, j], u, L)
-
-  where cost(stage, r, v) = w * P_busy(v) + (r * P_max - w) * P_idle(v)
-  and r is the minimum feasible core count (energy is non-decreasing in r
-  at a fixed period, so larger counts never help).
-
-- :func:`min_energy_under_period_freq` / :func:`freqherad` (strategy name
-  ``"freqherad"``): the DVFS extension. Every stage is assigned
-  (core type, replica count, frequency level) jointly: running tasks
-  [i, j] on r cores of type v at level f takes (w / f) / r per frame and
-  draws P_busy(v, f) = static + dynamic * f**3 while busy. The stage cost
-
-      cost([i, j], r, v, f) = (w/f) * P_busy(v, f)
-                              + (r * P_max - w/f) * P_idle(v)
-
-  stays additive at a fixed operating period, so the same min-sum DP
-  applies with the candidate set widened by the frequency axis (an extra
-  |F| factor: O(n^2 * |F| * b * l) states x transitions). FreqHeRAD is the
-  lexicographic (period, energy) optimum: P_max defaults to the best
-  period achievable at the highest frequency level (plain HeRAD on the
-  1/f_max-scaled chain — reusing ``herad_table`` machinery via
-  ``repro.core.dvfs``), and the DP then spends any per-stage slack on
-  downclocking. :func:`dvfs_frontier` sweeps frequency as a third axis of
-  the Pareto enumeration. Per-core-type frequency ladders are honored
-  throughout: ``freq_levels`` may be one shared tuple or a
-  ``{"big": ..., "little": ...}`` mapping.
-
-A fourth tool inverts the constraint: :func:`min_period_under_power`
+A final tool inverts the constraint: :func:`min_period_under_power`
 returns the fastest frontier point whose average draw fits under an
 operator power cap — the re-planning query of the runtime governor
 (``repro.control``) and of ``plan_pipeline(..., power_cap_w=...)``.
+Average power is strictly decreasing along a frontier, so the query is a
+bisection, not a scan.
+
+Complexity (n tasks, budgets b/l, |F| frequency levels): one
+``CandidateTable`` build is O(n^2 |F|) vectorized; a DP query is
+O(n^2 |F|) candidate plane-updates of O(b l) each; a budget sweep is
+O(n b l) vectorized steps per frequency profile. See docs/energy.md for
+the before/after table and BENCH_sched.json for measured latencies.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
+
+import numpy as np
 
 from repro.core.chain import (
     BIG,
     LITTLE,
+    _CEIL_EPS,
     EMPTY_SOLUTION,
     Solution,
     TaskChain,
@@ -80,7 +85,12 @@ from repro.core.dvfs import (
     extract_dvfs_solution,
     scale_chain,
 )
-from repro.core.herad import extract_solution, herad, herad_table
+from repro.core.herad import (
+    extract_solution,
+    herad,
+    herad_table,
+    plane_merged_stages,
+)
 
 from .account import energy, stage_energy_terms
 from .model import (
@@ -91,7 +101,6 @@ from .model import (
 )
 
 
-@dataclasses.dataclass(frozen=True)
 class ParetoPoint:
     """One (period, energy) operating point and the schedule achieving it.
 
@@ -100,86 +109,57 @@ class ParetoPoint:
     both expose ``core_usage()`` / ``period(chain)``. ``period`` is in the
     chain's time unit (µs for the DVB-S2 tables), ``energy`` in watt x
     time-unit (µJ) per frame.
+
+    Extraction is lazy: budget sweeps cost every sub-budget point straight
+    from the DP field arrays and attach an extractor instead of a
+    materialized schedule, so only the points something actually reads
+    (the frontier survivors, the governor's adopted plans) pay the O(n)
+    reconstruction. The first ``solution`` access caches the result;
+    hashing and ordering by (period, energy) never trigger extraction,
+    but ``==`` between points compares the schedules and therefore does.
     """
 
-    period: float
-    energy: float
-    solution: Solution | FreqSolution
-    # (big, little) cores this point was produced under: the swept
-    # sub-budget for HeRAD extractions, or the schedule's own core usage
-    # for points re-optimized by the min-energy refinement pass.
-    budget: tuple[int, int]
+    __slots__ = ("period", "energy", "budget", "_solution", "_extract")
+
+    def __init__(self, period: float, energy: float,
+                 solution: Solution | FreqSolution | None = None,
+                 budget: tuple[int, int] = (0, 0), *, extract=None):
+        if solution is None and extract is None:
+            raise ValueError("ParetoPoint needs a solution or an extractor")
+        self.period = float(period)
+        self.energy = float(energy)
+        # (big, little) cores this point was produced under: the swept
+        # sub-budget for sweep points, or the schedule's own core usage
+        # for points re-optimized by the min-energy refinement pass.
+        self.budget = (int(budget[0]), int(budget[1]))
+        self._solution = solution
+        self._extract = extract
+
+    @property
+    def solution(self) -> Solution | FreqSolution:
+        if self._solution is None:
+            self._solution = self._extract()
+        return self._solution
 
     def is_heterogeneous(self) -> bool:
         used_b, used_l = self.solution.core_usage()
         return used_b > 0 and used_l > 0
 
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, ParetoPoint):
+            return NotImplemented
+        return (self.period == other.period
+                and self.energy == other.energy
+                and self.budget == other.budget
+                and self.solution == other.solution)
 
-def sweep_budgets(
-    chain: TaskChain, b: int, l: int, power: PowerModel,
-) -> list[ParetoPoint]:
-    """All sub-budget HeRAD optima with their energies, one DP run.
+    def __hash__(self) -> int:
+        return hash((self.period, self.energy, self.budget))
 
-    Returns one point per non-empty sub-budget (b', l') <= (b, l),
-    b' + l' >= 1, sorted by (period, energy). Energy is evaluated at each
-    schedule's own achieved period. Empty when no cores are budgeted,
-    matching energad's EMPTY_SOLUTION convention.
-    """
-    if b < 0 or l < 0 or b + l <= 0:
-        return []
-    table = herad_table(chain, b, l)
-    points: list[ParetoPoint] = []
-    for bb in range(b + 1):
-        for ll in range(l + 1):
-            if bb + ll == 0:
-                continue
-            sol = extract_solution(table, chain, bb, ll)
-            if sol.is_empty():
-                continue
-            p = sol.period(chain)
-            points.append(ParetoPoint(p, energy(chain, sol, power), sol,
-                                      (bb, ll)))
-    points.sort(key=lambda pt: (pt.period, pt.energy))
-    return points
-
-
-def _non_dominated(points: list[ParetoPoint]) -> list[ParetoPoint]:
-    """Strictly monotone frontier: period increases, energy decreases."""
-    frontier: list[ParetoPoint] = []
-    for pt in sorted(points, key=lambda p: (p.period, p.energy)):
-        if frontier and pt.energy >= frontier[-1].energy - 1e-12:
-            continue  # dominated (equal-or-worse energy at a worse period)
-        frontier.append(pt)
-    return frontier
-
-
-def pareto_frontier(
-    chain: TaskChain, b: int, l: int, power: PowerModel,
-    refine: bool = True,
-) -> list[ParetoPoint]:
-    """The (period, energy) Pareto frontier over all sub-budgets of (b, l).
-
-    With ``refine=True`` each surviving period level is re-optimized with
-    the exact min-energy DP (:func:`min_energy_under_period`) — the
-    period-optimal schedule at a sub-budget is not necessarily the
-    energy-optimal one at its own period, so refinement can only lower the
-    curve. All schedules run at the nominal frequency; see
-    :func:`dvfs_frontier` for the frequency-swept frontier.
-    """
-    points = _non_dominated(sweep_budgets(chain, b, l, power))
-    if not refine:
-        return points
-    refined: list[ParetoPoint] = []
-    for pt in points:
-        sol = min_energy_under_period(chain, b, l, pt.period, power)
-        if sol.is_empty():
-            refined.append(pt)
-            continue
-        e = energy(chain, sol, power, period=pt.period)
-        refined.append(
-            ParetoPoint(pt.period, e, sol, sol.core_usage())
-            if e < pt.energy else pt)
-    return _non_dominated(refined)
+    def __repr__(self) -> str:
+        lazy = "" if self._solution is not None else ", lazy"
+        return (f"ParetoPoint(period={self.period!r}, "
+                f"energy={self.energy!r}, budget={self.budget!r}{lazy})")
 
 
 def _resolve_levels(
@@ -199,11 +179,201 @@ def _resolve_levels(
     return {v: tuple(sorted(set(levels))) for v, levels in norm.items()}
 
 
+# ----------------------------------------------------------- candidate table
+class CandidateTable:
+    """Precomputed (stage [i, j], core type, frequency) candidates.
+
+    Everything about a candidate that does NOT depend on the period bound
+    or the core budgets — interval work sums, replicability, per-level
+    busy/idle watts — computed once as numpy arrays and shared across all
+    ``p_max`` queries: the min-energy DPs, every refinement pass of a
+    frontier build, and the governor's re-plan queries all draw from one
+    table instead of re-enumerating candidates from scratch.
+
+    ``levels`` is the resolved ``{B: ladder, L: ladder}`` dict
+    (:func:`_resolve_levels`); budgets are supplied per query so one table
+    serves a shrinking device pool (governor device loss). After drift
+    recalibration only the chain weights change: :meth:`rescale` rebuilds
+    the weight-derived arrays on the new chain and reuses the rest.
+    """
+
+    def __init__(self, chain: TaskChain, power: PowerModel,
+                 levels: dict[str, tuple[float, ...]]):
+        self.chain = chain
+        self.power = power
+        self.levels = levels
+        self.rep = chain.rep_matrix()
+        self.works = self._build_works(chain, levels)
+        self._tri = np.tri(chain.n, dtype=bool).T  # j >= i
+
+    @staticmethod
+    def _build_works(chain, levels):
+        """works[v][fi, i, j] = stage_sum(i, j, v) / f — the per-frame busy
+        time of candidate stage [i, j] on type v at level fi. Shared by the
+        constructor and :meth:`rescale` so the two can never diverge."""
+        return {
+            v: chain.stage_sum_matrix(v)[None, :, :]
+            / np.asarray(levels[v], dtype=np.float64)[:, None, None]
+            for v in (BIG, LITTLE)
+        }
+
+    @classmethod
+    def build(cls, chain: TaskChain, power: PowerModel,
+              freq_levels=None) -> "CandidateTable":
+        """Resolve the ladder spec (one shared tuple, a per-core-type
+        mapping, or the model's default) and build the table."""
+        return cls(chain, power, _resolve_levels(power, freq_levels))
+
+    def rescale(self, chain: TaskChain) -> "CandidateTable":
+        """The same table on a reweighted chain (drift recalibration).
+
+        Only the weight-derived ``works`` arrays are rebuilt (from the
+        new chain's prefix sums, so the result is bit-identical to a
+        fresh build) — ladders, power constants, and the replicability
+        structure carry over as-is. The chain must have the same length
+        and replicable partition."""
+        if chain.n != self.chain.n or \
+                not np.array_equal(chain.replicable, self.chain.replicable):
+            raise ValueError("rescale needs an equal-structure chain")
+        other = CandidateTable.__new__(CandidateTable)
+        other.chain = chain
+        other.power = self.power
+        other.levels = self.levels
+        other.rep = self.rep
+        other._tri = self._tri
+        other.works = self._build_works(chain, self.levels)
+        return other
+
+    def query(self, b: int, l: int, p_max: float) -> dict:
+        """Price and filter every candidate for one (budget, period) query.
+
+        Returns ``{v: (r, cost, feasible)}`` arrays of shape
+        ``(|F_v|, n, n)``: minimum replica counts (``cores_for_work``),
+        stage energies (:func:`stage_energy_terms` — busy at the
+        candidate's level, idle against the ``p_max`` beat), and the
+        feasibility mask (budget caps, sequential stages capped at one
+        core). All arithmetic is elementwise-identical to the scalar
+        reference DP's, which is what keeps the vectorized DP bit-exact.
+
+        The feasibility mask is additionally pruned of candidates that
+        provably never win a DP cell: within one (stage, type, replica
+        count) group, a higher-level candidate whose cost is >= an
+        earlier (lower-f) member's can never strictly beat a plane the
+        earlier member already updated (float addition is monotone and
+        the DP compares with strict <), so dropping it changes nothing —
+        including tie-breaking.
+        """
+        out = {}
+        for v in (BIG, LITTLE):
+            cap = b if v == BIG else l
+            work = self.works[v]
+            r_real = np.maximum(1.0, np.ceil(work / p_max - _CEIL_EPS))
+            feas = self._tri[None, :, :] & np.where(
+                self.rep[None, :, :], r_real <= cap, r_real <= 1.0)
+            if cap <= 0:
+                feas &= False
+            r = np.where(self.rep[None, :, :], r_real, 1.0)
+            r = np.minimum(r, max(cap, 1)).astype(np.int64)
+            cost = np.zeros_like(work)
+            for fi, f in enumerate(self.levels[v]):
+                busy, idle = stage_energy_terms(
+                    work[fi], r[fi], v, p_max, self.power, f)
+                cost[fi] = busy + idle
+            for fi in range(1, len(self.levels[v])):
+                dominated = np.zeros(feas.shape[1:], dtype=bool)
+                for fj in range(fi):
+                    dominated |= feas[fj] & (r[fj] == r[fi]) \
+                        & (cost[fj] <= cost[fi])
+                feas[fi] &= ~dominated
+            out[v] = (r, cost, feas)
+        return out
+
+
+def _min_energy_dp(table: CandidateTable, b: int, l: int,
+                   p_max: float) -> FreqSolution:
+    """Vectorized min-sum DP over the (b+1, l+1) budget plane.
+
+    Bit-identical to :func:`min_energy_under_period_freq_reference`:
+    candidates are applied in the same (stage start, core type, level)
+    order with the same strict-< tie-breaking, each as one shift-add
+    plane update; parents store candidate ids for O(n) reconstruction.
+    """
+    chain = table.chain
+    n = chain.n
+    q = table.query(b, l, p_max)
+    # enumerate the surviving candidates once with numpy, in exactly the
+    # scalar reference's order: stage start ascending, big before little,
+    # ladder ascending (lexsort keys are read last-to-first)
+    jjs, iis, rrs, vvs, ffs, dbs, dls, ccs = \
+        [], [], [], [], [], [], [], []
+    for vflag, v in enumerate((BIG, LITTLE)):
+        rv, cv, fev = q[v]
+        ff, ii, jj = np.nonzero(fev)
+        jjs.append(jj)
+        iis.append(ii)
+        rrs.append(rv[ff, ii, jj])
+        vvs.append(np.full(len(jj), vflag, dtype=np.int8))
+        ffs.append(np.asarray(table.levels[v])[ff])
+        ccs.append(cv[ff, ii, jj])
+    jj = np.concatenate(jjs)
+    ii = np.concatenate(iis)
+    rr = np.concatenate(rrs)
+    vv = np.concatenate(vvs)
+    order = np.lexsort((np.concatenate(ffs), vv, ii, jj))
+    jj, ii, rr, vv = jj[order], ii[order], rr[order], vv[order]
+    recs_all = list(zip(
+        ii.tolist(), rr.tolist(), vv.tolist(),
+        np.concatenate(ffs)[order].tolist(),
+        np.where(vv == 0, rr, 0).tolist(),
+        np.where(vv == 0, 0, rr).tolist(),
+        np.concatenate(ccs)[order].tolist()))
+    bounds = np.searchsorted(jj, np.arange(n + 1))
+    E = np.full((n, b + 1, l + 1), math.inf)
+    pid = np.full((n, b + 1, l + 1), -1, dtype=np.int32)
+    nbuf = np.empty((b + 1, l + 1))
+    mbuf = np.empty((b + 1, l + 1), dtype=bool)
+    cands: list[list[tuple]] = []
+    for j in range(n):
+        recs = recs_all[bounds[j]:bounds[j + 1]]
+        Ej, pj = E[j], pid[j]
+        for cidx, (i, r, vflag, f, db, dl, cost) in enumerate(recs):
+            if i == 0:
+                if cost < Ej[db, dl]:
+                    Ej[db, dl] = cost
+                    pj[db, dl] = cidx
+                continue
+            nE = nbuf[: b + 1 - db, : l + 1 - dl]
+            np.add(E[i - 1][: b + 1 - db, : l + 1 - dl], cost, out=nE)
+            tgt = Ej[db:, dl:]
+            m = mbuf[: b + 1 - db, : l + 1 - dl]
+            np.less(nE, tgt, out=m)
+            if m.any():
+                np.copyto(tgt, nE, where=m)
+                np.copyto(pj[db:, dl:], cidx, where=m, casting="unsafe")
+        cands.append(recs)
+    end = E[n - 1]
+    k = int(np.argmin(end))  # C-order first min == (energy, ub, ul) lex min
+    ub, ul = divmod(k, l + 1)
+    if not math.isfinite(end[ub, ul]):
+        return EMPTY_FREQ_SOLUTION
+    stages: list[FreqStage] = []
+    j = n - 1
+    while j >= 0:
+        i, r, vflag, f, db, dl, _ = cands[j][pid[j][ub, ul]]
+        stages.append(FreqStage(i, j, r, BIG if vflag == 0 else LITTLE, f))
+        j, ub, ul = i - 1, ub - db, ul - dl
+    # merging adjacent same-type same-frequency replicable stages changes
+    # neither period nor energy (both terms are additive) but saves
+    # runtime stage hops
+    return FreqSolution(tuple(reversed(stages))).merge_replicable(chain)
+
+
 # ------------------------------------------------------- energy-constrained
 def min_energy_under_period_freq(
     chain: TaskChain, b: int, l: int, p_max: float,
     power: PowerModel = DEFAULT_DVFS_POWER,
     freq_levels=None,
+    candidates: CandidateTable | None = None,
 ) -> FreqSolution:
     """Minimum-energy (schedule, per-stage DVFS level) with period <= p_max.
 
@@ -224,6 +394,33 @@ def min_energy_under_period_freq(
     frequency. Returns EMPTY_FREQ_SOLUTION when no assignment meets the
     bound — including ``p_max=inf``, where idle energy against the beat
     diverges.
+
+    Vectorized over the (b+1, l+1) budget plane; bit-identical results to
+    :func:`min_energy_under_period_freq_reference` (the retained scalar
+    oracle). ``candidates`` short-circuits the per-call precomputation
+    with a shared :class:`CandidateTable` (its chain/power/ladders take
+    precedence over the ``chain``/``power``/``freq_levels`` arguments) —
+    frontier refinement and the governor reuse one table across all
+    ``p_max`` queries.
+    """
+    if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
+        return EMPTY_FREQ_SOLUTION
+    if candidates is None:
+        candidates = CandidateTable.build(chain, power, freq_levels)
+    return _min_energy_dp(candidates, b, l, p_max)
+
+
+def min_energy_under_period_freq_reference(
+    chain: TaskChain, b: int, l: int, p_max: float,
+    power: PowerModel = DEFAULT_DVFS_POWER,
+    freq_levels=None,
+) -> FreqSolution:
+    """Scalar-loop oracle for :func:`min_energy_under_period_freq`.
+
+    The original pure-Python DP, kept verbatim as the certification
+    reference: the vectorized kernel must reproduce its schedules,
+    energies, and tie-breaking bit for bit (see tests/test_pareto_equiv).
+    Prefer the vectorized entry point everywhere else.
     """
     levels = _resolve_levels(power, freq_levels)
     if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
@@ -305,6 +502,7 @@ def min_energy_under_period_freq(
 def min_energy_under_period(
     chain: TaskChain, b: int, l: int, p_max: float,
     power: PowerModel = DEFAULT_POWER,
+    candidates: CandidateTable | None = None,
 ) -> Solution:
     """Minimum-energy schedule with period <= ``p_max`` (exact DP).
 
@@ -317,11 +515,25 @@ def min_energy_under_period(
 
     This is the nominal-frequency specialization of
     :func:`min_energy_under_period_freq` (``freq_levels=(1.0,)``); both
-    run the identical DP, so a single-level FreqHeRAD reproduces these
-    solutions stage for stage.
+    run the identical (vectorized) DP, so a single-level FreqHeRAD
+    reproduces these solutions stage for stage. ``candidates`` shares a
+    nominal-ladder :class:`CandidateTable` across queries.
     """
     fsol = min_energy_under_period_freq(chain, b, l, p_max, power,
-                                        freq_levels=(1.0,))
+                                        freq_levels=(1.0,),
+                                        candidates=candidates)
+    if fsol.is_empty():
+        return EMPTY_SOLUTION
+    return fsol.to_solution()
+
+
+def min_energy_under_period_reference(
+    chain: TaskChain, b: int, l: int, p_max: float,
+    power: PowerModel = DEFAULT_POWER,
+) -> Solution:
+    """Scalar-loop oracle for :func:`min_energy_under_period`."""
+    fsol = min_energy_under_period_freq_reference(chain, b, l, p_max, power,
+                                                  freq_levels=(1.0,))
     if fsol.is_empty():
         return EMPTY_SOLUTION
     return fsol.to_solution()
@@ -394,6 +606,193 @@ def freqherad(
     return min_energy_under_period_freq(chain, b, l, p_max, power, levels)
 
 
+# ----------------------------------------------------------- budget sweeps
+class _StackedTables:
+    """Per-profile HeRAD matrices stacked along a leading axis, in the
+    field layout ``plane_merged_stages`` walks (shapes (n, P, b+1, l+1)).
+
+    Matrices fresh out of one ``herad_tables`` call already share stacked
+    base arrays — those are adopted directly; anything else is re-stacked.
+    """
+
+    __slots__ = ("P", "accb", "accl", "prevb", "prevl", "v", "start")
+
+    def __init__(self, matrices):
+        base = getattr(matrices[0], "stacked", None)
+        if (base is not None
+                and base[0].shape[1] == len(matrices)
+                and all(getattr(m, "stacked", None) is base
+                        and m.stacked_index == p
+                        for p, m in enumerate(matrices))):
+            (self.P, self.accb, self.accl, self.prevb, self.prevl,
+             self.v, self.start) = base
+            return
+        for f in self.__slots__:
+            setattr(self, f,
+                    np.stack([getattr(m, f) for m in matrices], axis=1))
+
+
+def _plane_point_fields(table, table_chain: TaskChain, chain: TaskChain,
+                        f_big, f_little, bw_big, bw_little,
+                        power: PowerModel):
+    """(feasible, period, energy) arrays for every sub-budget cell.
+
+    Walks the merged stage sequences of all cells in lockstep
+    (``plane_merged_stages``) and replays, per cell, exactly the float
+    operations ``Solution.period`` / ``energy_report`` would apply to the
+    extracted schedule: stage weights from the original chain's interval
+    sums, busy/idle terms accumulated in stage order, total = busy + idle.
+    ``table_chain`` is the (possibly 1/f-scaled) chain the DP table was
+    filled on; weights and works are priced on ``chain`` at the global
+    per-type profile (f_big, f_little), matching
+    ``FreqSolution.period(chain)`` / ``FreqStage.work(chain)``.
+    ``f_big``/``f_little`` and the matching busy watts are floats for one
+    table or broadcastable (P, 1, 1) arrays for a profile-stacked one.
+    """
+    feasible, steps = plane_merged_stages(table, table_chain)
+    shape = feasible.shape
+    period = np.full(shape, -math.inf)
+    busy = np.zeros(shape)
+    idle = np.zeros(shape)
+    if not steps:
+        return feasible, period, busy
+    mat = {v: chain.stage_sum_matrix(v) for v in (BIG, LITTLE)}
+    repm = chain.rep_matrix()
+    iw_b = power.idle_watts(BIG)
+    iw_l = power.idle_watts(LITTLE)
+    cached = []
+    for s, e, r, vb, emit in steps:
+        if not emit.any():
+            cached.append(None)
+            continue
+        tot = np.where(vb, mat[BIG][s, e], mat[LITTLE][s, e])
+        rsafe = np.maximum(r, 1)
+        f_v = np.where(vb, f_big, f_little)
+        # chain.weight: total / r for replicable stages, plain total for
+        # sequential ones; FreqStage.weight then divides by the level
+        w = np.where(repm[s, e], tot / rsafe, tot) / f_v
+        period = np.where(emit, np.maximum(period, w), period)
+        cached.append((tot / f_v, rsafe, vb, emit))
+    for entry in cached:
+        if entry is None:
+            continue
+        work, r, vb, emit = entry
+        stage_busy = work * np.where(vb, bw_big, bw_little)
+        stage_idle = np.maximum(r * period - work, 0.0) \
+            * np.where(vb, iw_b, iw_l)
+        busy = np.where(emit, busy + stage_busy, busy)
+        idle = np.where(emit, idle + stage_idle, idle)
+    return feasible, period, busy + idle
+
+
+def _sweep_fields(chain: TaskChain, b: int, l: int, power: PowerModel):
+    """One nominal table plus per-cell (feasible, period, energy)."""
+    table = herad_table(chain, b, l)
+    feasible, period, en = _plane_point_fields(
+        table, chain, chain, 1.0, 1.0,
+        power.busy_watts(BIG, 1.0), power.busy_watts(LITTLE, 1.0), power)
+    return table, feasible, period, en
+
+
+def _survivor_points(feasible, period, en, cell_info):
+    """Non-dominated subset straight from sweep field arrays.
+
+    Selects exactly the points ``_non_dominated(sorted full sweep)``
+    would — stable (period, energy) sort over generation (C) order, then
+    the strictly-monotone scan with the same 1e-12 margin — but
+    materializes ``ParetoPoint`` objects only for the survivors, so
+    frontier builds skip the per-cell Python object churn of a full
+    sweep. ``cell_info(flat_index) -> (budget, extractor)`` resolves a
+    surviving cell of the C-ordered ``feasible`` array.
+    """
+    idx = np.nonzero(feasible.reshape(-1))[0]
+    pers = period.reshape(-1)[idx]
+    ens = en.reshape(-1)[idx]
+    order = np.lexsort((ens, pers))  # stable: ties keep generation order
+    out: list[ParetoPoint] = []
+    last_e = math.inf
+    for p_, e_, fi in zip(pers[order].tolist(), ens[order].tolist(),
+                          idx[order].tolist()):
+        if out and e_ >= last_e - 1e-12:
+            continue
+        budget, extract = cell_info(fi)
+        out.append(ParetoPoint(p_, e_, budget=budget, extract=extract))
+        last_e = e_
+    return out
+
+
+def sweep_budgets(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+) -> list[ParetoPoint]:
+    """All sub-budget HeRAD optima with their energies, one DP run.
+
+    Returns one point per non-empty sub-budget (b', l') <= (b, l),
+    b' + l' >= 1, sorted by (period, energy). Energy is evaluated at each
+    schedule's own achieved period. Empty when no cores are budgeted,
+    matching energad's EMPTY_SOLUTION convention.
+
+    All points are costed straight from the DP field arrays
+    (:func:`_plane_point_fields`); schedules are extracted lazily on
+    first ``ParetoPoint.solution`` access. Bit-identical to
+    :func:`sweep_budgets_reference`.
+    """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    table, feasible, period, en = _sweep_fields(chain, b, l, power)
+    points: list[ParetoPoint] = []
+    for bb in range(b + 1):
+        for ll in range(l + 1):
+            if bb + ll == 0 or not feasible[bb, ll]:
+                continue
+
+            def ex(bb=bb, ll=ll):
+                return extract_solution(table, chain, bb, ll)
+
+            points.append(ParetoPoint(period[bb, ll], en[bb, ll],
+                                      budget=(bb, ll), extract=ex))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
+def sweep_budgets_reference(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+) -> list[ParetoPoint]:
+    """Scalar oracle for :func:`sweep_budgets`: one extraction + one
+    accounting call per sub-budget cell."""
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    table = herad_table(chain, b, l)
+    points: list[ParetoPoint] = []
+    for bb in range(b + 1):
+        for ll in range(l + 1):
+            if bb + ll == 0:
+                continue
+            sol = extract_solution(table, chain, bb, ll)
+            if sol.is_empty():
+                continue
+            p = sol.period(chain)
+            points.append(ParetoPoint(p, energy(chain, sol, power), sol,
+                                      (bb, ll)))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
+def _sweep_fields_freq(chain: TaskChain, b: int, l: int, power: PowerModel,
+                       freq_levels=None):
+    """Profile-grid tables plus per-(profile, cell) point fields."""
+    tables = dvfs_tables(chain, b, l, _resolve_levels(power, freq_levels))
+    profiles = list(tables)
+    stacked = _StackedTables([tables[p][0] for p in profiles])
+    col = np.array(profiles)[:, :, None, None]           # (P, 2, 1, 1)
+    bw_b = np.array([power.busy_watts(BIG, fb)
+                     for fb, _ in profiles])[:, None, None]
+    bw_l = np.array([power.busy_watts(LITTLE, fl)
+                     for _, fl in profiles])[:, None, None]
+    feasible, period, en = _plane_point_fields(
+        stacked, chain, chain, col[:, 0], col[:, 1], bw_b, bw_l, power)
+    return tables, profiles, feasible, period, en
+
+
 def sweep_budgets_freq(
     chain: TaskChain, b: int, l: int, power: PowerModel,
     freq_levels=None,
@@ -401,16 +800,44 @@ def sweep_budgets_freq(
     """All (sub-budget x frequency-profile) HeRAD optima with energies.
 
     The frequency axis of the Pareto enumeration: for every global
-    per-core-type profile (f_big, f_little) on the level grid, one
+    per-core-type profile (f_big, f_little) on the level grid — distinct
+    profiles only, duplicates in the ladder spec are swept once — one
     vectorized HeRAD table over the 1/f-scaled chain
     (``repro.core.dvfs.dvfs_tables``) yields the period-optimal schedule
     of every sub-budget (b', l') <= (b, l). Each core type draws its
     profile entry from its own ladder when ``freq_levels`` (or the
-    model's) is a per-core-type mapping. Points carry
+    model's) is a per-core-type mapping. Points carry lazily-extracted
     :class:`~repro.core.dvfs.FreqSolution` schedules annotated with the
     profile, costed at their own achieved period; sorted by
-    (period, energy).
+    (period, energy). Bit-identical to
+    :func:`sweep_budgets_freq_reference`.
     """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables, profiles, feasible, period, en = _sweep_fields_freq(
+        chain, b, l, power, freq_levels)
+    points: list[ParetoPoint] = []
+    for pi, profile in enumerate(profiles):
+        for bb in range(b + 1):
+            for ll in range(l + 1):
+                if bb + ll == 0 or not feasible[pi, bb, ll]:
+                    continue
+
+                def ex(profile=profile, bb=bb, ll=ll):
+                    return extract_dvfs_solution(tables, profile, bb, ll)
+
+                points.append(ParetoPoint(period[pi, bb, ll],
+                                          en[pi, bb, ll],
+                                          budget=(bb, ll), extract=ex))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
+def sweep_budgets_freq_reference(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    freq_levels=None,
+) -> list[ParetoPoint]:
+    """Scalar oracle for :func:`sweep_budgets_freq`."""
     if b < 0 or l < 0 or b + l <= 0:
         return []
     tables = dvfs_tables(chain, b, l, _resolve_levels(power, freq_levels))
@@ -431,10 +858,66 @@ def sweep_budgets_freq(
     return points
 
 
+# --------------------------------------------------------------- frontiers
+def _non_dominated(points: list[ParetoPoint]) -> list[ParetoPoint]:
+    """Strictly monotone frontier: period increases, energy decreases."""
+    frontier: list[ParetoPoint] = []
+    for pt in sorted(points, key=lambda p: (p.period, p.energy)):
+        if frontier and pt.energy >= frontier[-1].energy - 1e-12:
+            continue  # dominated (equal-or-worse energy at a worse period)
+        frontier.append(pt)
+    return frontier
+
+
+def pareto_frontier(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    refine: bool = True,
+    candidates: CandidateTable | None = None,
+) -> list[ParetoPoint]:
+    """The (period, energy) Pareto frontier over all sub-budgets of (b, l).
+
+    With ``refine=True`` each surviving period level is re-optimized with
+    the exact min-energy DP (:func:`min_energy_under_period`) — the
+    period-optimal schedule at a sub-budget is not necessarily the
+    energy-optimal one at its own period, so refinement can only lower the
+    curve. All refinement queries share one nominal-ladder
+    :class:`CandidateTable` (pass ``candidates`` to reuse a caller-held
+    one, e.g. the governor's across re-plans). All schedules run at the
+    nominal frequency; see :func:`dvfs_frontier` for the frequency-swept
+    frontier.
+    """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    table, feasible, period, en = _sweep_fields(chain, b, l, power)
+
+    def cell_info(fi):
+        bb, ll = divmod(fi, l + 1)
+        return (bb, ll), lambda: extract_solution(table, chain, bb, ll)
+
+    points = _survivor_points(feasible, period, en, cell_info)
+    if not refine:
+        return points
+    if points and candidates is None:
+        candidates = CandidateTable.build(chain, power, (1.0,))
+    refined: list[ParetoPoint] = []
+    for pt in points:
+        sol = min_energy_under_period(chain, b, l, pt.period, power,
+                                      candidates=candidates)
+        if sol.is_empty():
+            refined.append(pt)
+            continue
+        e = energy(chain, sol, power, period=pt.period)
+        refined.append(
+            ParetoPoint(pt.period, e, sol, sol.core_usage())
+            if e < pt.energy else pt)
+    return _non_dominated(refined)
+
+
 def dvfs_frontier(
     chain: TaskChain, b: int, l: int, power: PowerModel,
     freq_levels=None,
     refine: bool = True,
+    candidates: CandidateTable | None = None,
 ) -> list[ParetoPoint]:
     """The (period, energy) frontier with frequency as a third sweep axis.
 
@@ -443,18 +926,35 @@ def dvfs_frontier(
     ``refine=True`` each surviving period level is re-optimized by the
     exact per-stage-frequency DP (:func:`min_energy_under_period_freq`),
     which can mix levels within one schedule and therefore only lowers
-    the curve. Every point of the nominal frontier is weakly dominated by
-    this one; on platforms with real DVFS headroom the domination is
-    strict (see examples/dvfs_frontier.py).
+    the curve. All refinement queries share one :class:`CandidateTable`
+    instead of re-enumerating the (i, j, type, freq) candidates per
+    frontier point. Every point of the nominal frontier is weakly
+    dominated by this one; on platforms with real DVFS headroom the
+    domination is strict (see examples/dvfs_frontier.py).
     """
-    points = _non_dominated(
-        sweep_budgets_freq(chain, b, l, power, freq_levels))
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables, profiles, feasible, period, en = _sweep_fields_freq(
+        chain, b, l, power, freq_levels)
+    cells = (b + 1) * (l + 1)
+
+    def cell_info(fi):
+        pi, rem = divmod(fi, cells)
+        bb, ll = divmod(rem, l + 1)
+        profile = profiles[pi]
+        return ((bb, ll),
+                lambda: extract_dvfs_solution(tables, profile, bb, ll))
+
+    points = _survivor_points(feasible, period, en, cell_info)
     if not refine:
         return points
+    if points and candidates is None:
+        candidates = CandidateTable.build(chain, power, freq_levels)
     refined: list[ParetoPoint] = []
     for pt in points:
         fsol = min_energy_under_period_freq(chain, b, l, pt.period, power,
-                                            freq_levels)
+                                            freq_levels,
+                                            candidates=candidates)
         if fsol.is_empty():
             refined.append(pt)
             continue
@@ -480,8 +980,11 @@ def min_period_under_power(
     minimum-period point with average draw ``energy / period <= cap_w``
     (watts, since energies are watt x time-unit per frame and periods are
     in the same time unit). Average power is strictly decreasing along the
-    frontier (energy falls while period rises), so the first point under
-    the cap is the fastest feasible one.
+    frontier (energy falls while period rises), so admissibility is
+    monotone in the frontier index and the fastest feasible point is
+    found by bisection — O(log F) comparisons per query instead of a
+    linear scan; the ``cap + 1e-9`` admission epsilon matches the
+    governor's cap-trigger epsilon on the other side.
 
     ``dvfs=True`` queries the frequency-swept frontier
     (:func:`dvfs_frontier`, per-stage levels from ``freq_levels`` /
@@ -496,7 +999,15 @@ def min_period_under_power(
     if frontier is None:
         frontier = dvfs_frontier(chain, b, l, power, freq_levels) if dvfs \
             else pareto_frontier(chain, b, l, power)
-    for pt in frontier:
-        if pt.period > 0 and pt.energy / pt.period <= cap_w + 1e-9:
-            return pt
-    return None
+
+    def admissible(pt: ParetoPoint) -> bool:
+        return pt.period > 0 and pt.energy / pt.period <= cap_w + 1e-9
+
+    lo, hi = 0, len(frontier)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if admissible(frontier[mid]):
+            hi = mid
+        else:
+            lo = mid + 1
+    return frontier[lo] if lo < len(frontier) else None

@@ -188,7 +188,8 @@ class PipelinePlan:
 def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
                   tokens_per_step: int, mode: str = "decode",
                   strategy: str = "herad", power=None,
-                  power_cap_w: float | None = None) -> PipelinePlan:
+                  power_cap_w: float | None = None,
+                  frontier=None) -> PipelinePlan:
     """Schedule ``cfg``'s layer chain onto ``system``.
 
     For the energy-constrained ``strategy="energad"`` the optional
@@ -208,18 +209,23 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
 
     ``power_cap_w`` plans under an operator power cap instead: the
     fastest (period, energy) Pareto-frontier point whose average draw
-    fits under the cap (``repro.energy.pareto.min_period_under_power``) —
-    the runtime governor's re-plan query, exposed here so an initial
-    deployment and every later re-plan pick schedules the same way.
-    ``strategy`` then only selects the frontier ("freqherad" sweeps
-    per-stage DVFS levels; anything else uses the nominal frontier).
-    Raises when even the frugalest schedule exceeds the cap.
+    fits under the cap (``repro.energy.pareto.min_period_under_power``,
+    a bisection over the cached frontier) — the runtime governor's
+    re-plan query, exposed here so an initial deployment and every later
+    re-plan pick schedules the same way. ``strategy`` then only selects
+    the frontier ("freqherad" sweeps per-stage DVFS levels; anything
+    else uses the nominal frontier). Raises when even the frugalest
+    schedule exceeds the cap. Pass ``frontier`` (a list of
+    ``ParetoPoint`` from a previous cap query, sorted by period as the
+    builders return it) to re-plan under a sequence of caps without
+    re-sweeping — frontier construction, not the query, is the
+    expensive part (see BENCH_sched.json).
     """
     chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
                            system=system)
     if power_cap_w is not None:
         return _plan_under_cap(cfg, chain, system, tokens_per_step,
-                               strategy, power, power_cap_w)
+                               strategy, power, power_cap_w, frontier)
     if strategy == "energad":
         from repro.energy.model import PowerModel
         from repro.energy.pareto import energad
@@ -258,7 +264,7 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
 
 def _plan_under_cap(cfg, chain, system: HeterogeneousSystem,
                     tokens_per_step: int, strategy: str, power,
-                    power_cap_w: float) -> PipelinePlan:
+                    power_cap_w: float, frontier=None) -> PipelinePlan:
     """Fastest frontier plan with average draw <= ``power_cap_w``."""
     from repro.core.dvfs import FreqSolution
     from repro.energy.model import DEFAULT_DVFS_POWER, PowerModel
@@ -270,7 +276,8 @@ def _plan_under_cap(cfg, chain, system: HeterogeneousSystem,
             system,
             freq_levels=DEFAULT_DVFS_POWER.freq_levels if dvfs else (1.0,))
     pt = min_period_under_power(chain, system.big.count, system.little.count,
-                                power, power_cap_w, dvfs=dvfs)
+                                power, power_cap_w, dvfs=dvfs,
+                                frontier=frontier)
     if pt is None:
         raise ValueError(
             f"no schedule for {cfg.name} fits under {power_cap_w} W on "

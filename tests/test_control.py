@@ -361,6 +361,89 @@ def test_governor_upshifts_when_cap_recovers():
     assert [e.trigger for e in gov.replans] == ["cap", "cap"]
 
 
+def _reference_frontier(chain, b, l, power, dvfs, freq_levels=None):
+    """The pre-PR (scalar oracle) frontier composition."""
+    from repro.energy import (
+        energy,
+        min_energy_under_period_freq_reference,
+        min_energy_under_period_reference,
+        sweep_budgets_freq_reference,
+        sweep_budgets_reference,
+    )
+    from repro.energy.pareto import ParetoPoint, _non_dominated
+
+    pts = _non_dominated(
+        sweep_budgets_freq_reference(chain, b, l, power, freq_levels)
+        if dvfs else sweep_budgets_reference(chain, b, l, power))
+    refined = []
+    for pt in pts:
+        sol = (min_energy_under_period_freq_reference(
+                   chain, b, l, pt.period, power, freq_levels) if dvfs
+               else min_energy_under_period_reference(
+                   chain, b, l, pt.period, power))
+        if sol.is_empty():
+            refined.append(pt)
+            continue
+        e = energy(chain, sol, power, period=pt.period)
+        refined.append(ParetoPoint(pt.period, e, sol, sol.core_usage())
+                       if e < pt.energy else pt)
+    return _non_dominated(refined)
+
+
+@pytest.mark.parametrize("dvfs", [False, True])
+def test_governor_replans_identical_before_and_after_fast_path(dvfs):
+    """The vectorized planning layer (shared candidate table, batched
+    tables, lazy sweep) adopts exactly the plans the scalar reference
+    composition would have, through a full scripted life: start, cap
+    drop, drift recalibration, device loss."""
+    from repro.energy import min_period_under_power
+
+    ch = small_chain()
+    power = PowerModel("t", CoreTypePower(0.1, 0.9),
+                       CoreTypePower(0.03, 0.32),
+                       freq_levels=(0.6, 1.0) if dvfs else (1.0,))
+    front = (dvfs_frontier if dvfs else pareto_frontier)(ch, 3, 2, power)
+    watts = [pt.energy / pt.period for pt in front]
+    budget = ScriptedBudget(((0.0, watts[0] + 1.0),
+                             (5.0, watts[len(front) // 2] * 1.001)))
+    gov = Governor(ch, 3, 2, power, budget, dvfs=dvfs)
+
+    def expect(t, b, l, chain):
+        ref = _reference_frontier(chain, b, l, power, dvfs)
+        pt = min_period_under_power(chain, b, l, power, budget.cap_at(t),
+                                    frontier=ref)
+        return pt if pt is not None else ref[-1]
+
+    ev = gov.start()
+    want = expect(0.0, 3, 2, gov.chain)
+    assert (ev.plan.point.period, ev.plan.point.energy) == \
+        (want.period, want.energy)
+    assert ev.plan.point.solution == want.solution
+    # cap drop at t=5
+    ev = gov.observe(Observation(t=5.0, period=gov.plan.predicted_period))
+    assert ev is not None and ev.trigger == "cap"
+    want = expect(5.0, 3, 2, gov.chain)
+    assert (ev.plan.point.period, ev.plan.point.energy) == \
+        (want.period, want.energy)
+    assert ev.plan.point.solution == want.solution
+    # drift: chain recalibrated, frontier rebuilt via the rescaled
+    # candidate table — still identical to a reference rebuild on the
+    # recalibrated chain
+    ev = gov.observe(Observation(t=6.0,
+                                 period=gov.plan.predicted_period * 1.5))
+    assert ev is not None and ev.trigger == "drift"
+    want = expect(6.0, 3, 2, gov.chain)
+    assert (ev.plan.point.period, ev.plan.point.energy) == \
+        (want.period, want.energy)
+    assert ev.plan.point.solution == want.solution
+    # device loss: same candidate table queried at the shrunken budgets
+    ev = gov.device_loss(7.0, big=1)
+    want = expect(7.0, 2, 2, gov.chain)
+    assert (ev.plan.point.period, ev.plan.point.energy) == \
+        (want.period, want.energy)
+    assert ev.plan.point.solution == want.solution
+
+
 def test_governor_misuse_raises():
     ch = small_chain()
     gov = Governor(ch, 3, 2, POWER, ConstantBudget(10.0))
