@@ -1,15 +1,21 @@
-"""Closed-loop control scenarios as CSV — battery drain and thermal
-throttle traces driven end to end through governor + streaming runtime.
+"""Closed-loop control scenarios as CSV — battery drain (open-loop and
+measurement-closed) and thermal throttle traces driven end to end through
+governor + streaming runtime.
 
 For each scenario the harness prints one row per control window
-(measured vs predicted period and power, the cap, and which governor
-trigger fired) plus a summary row (re-plans, dropped frames, worst
-period error, worst cap headroom). Follows benchmarks/run.py's
-``name,...`` CSV contract.
+(measured vs predicted period and power, the cap and its within-window
+floor, and which governor trigger fired) plus a summary row (re-plans,
+dropped frames, worst period error, worst cap-floor headroom, over-cap
+window count). ``--lookahead`` enables predictive re-planning — with a
+one-window horizon the over-cap count drops to zero on the traces whose
+steps land mid-window. Follows benchmarks/run.py's ``name,...`` CSV
+contract.
 
   PYTHONPATH=src python benchmarks/control_scenarios.py
   PYTHONPATH=src python benchmarks/control_scenarios.py --platform x7 \
       --scenario thermal --time-scale 4e-6
+  PYTHONPATH=src python benchmarks/control_scenarios.py \
+      --scenario metered_battery --lookahead 1.0
 """
 from __future__ import annotations
 
@@ -29,51 +35,63 @@ from repro.configs.dvbs2 import (  # noqa: E402
 from repro.control import Governor, run_scenario  # noqa: E402
 
 HORIZON_S = 9.0
+SCENARIOS = ["battery", "metered_battery", "thermal"]
 
 
-def run_one(platform: str, scenario: str, time_scale: float) -> None:
+def run_one(platform: str, scenario: str, time_scale: float,
+            lookahead_s: float) -> None:
     chain = dvbs2_chain(platform)
     power = platform_power(platform)
     b, l = RESOURCES[platform]["half"]
     budget = budget_presets(platform, "half", horizon_s=HORIZON_S)[scenario]
-    gov = Governor(chain, b, l, power, budget)
+    gov = Governor(chain, b, l, power, budget, lookahead_s=lookahead_s)
+    # the metered battery outlives the open-loop projection when the
+    # governor downshifts (less drain than assumed): give it headroom
+    n_windows = int(HORIZON_S) + (3 if scenario == "metered_battery" else 0)
     res = run_scenario(gov, time_scale=time_scale,
-                       n_windows=int(HORIZON_S), window_dt=1.0,
+                       n_windows=n_windows, window_dt=1.0,
                        frames_per_window=30)
     print(f"# {scenario} on {platform} (b={b}, l={l}, "
-          f"time_scale={time_scale:g})")
-    print("control,platform,scenario,window,t_s,cap_w,meas_period_us,"
-          "pred_period_us,period_err_pct,meas_w,pred_w,trigger")
+          f"time_scale={time_scale:g}, lookahead={lookahead_s:g})")
+    print("control,platform,scenario,window,t_s,cap_w,cap_floor_w,"
+          "meas_period_us,pred_period_us,period_err_pct,meas_w,pred_w,"
+          "over_cap,trigger")
     for w in res.windows:
         trigger = "/".join(e.trigger for e in w.events) or "-"
         print(f"control,{platform},{scenario},{w.index},{w.t:.1f},"
-              f"{w.cap_w:.2f},{w.measured_period:.1f},"
+              f"{w.cap_w:.2f},{w.min_cap_w:.2f},{w.measured_period:.1f},"
               f"{w.predicted_period:.1f},{100 * w.period_error:.1f},"
-              f"{w.measured_watts:.2f},{w.predicted_watts:.2f},{trigger}")
+              f"{w.measured_watts:.2f},{w.predicted_watts:.2f},"
+              f"{int(w.over_cap)},{trigger}")
     worst_err = max(w.period_error for w in res.windows)
-    worst_headroom = min(w.cap_w - w.measured_watts for w in res.windows)
+    worst_headroom = min(w.min_cap_w - w.measured_watts
+                         for w in res.windows)
     print("control_summary,platform,scenario,replans,frames_fed,"
-          "frames_dropped,worst_period_err_pct,worst_cap_headroom_w")
+          "frames_dropped,worst_period_err_pct,worst_cap_headroom_w,"
+          "over_cap_windows")
     print(f"control_summary,{platform},{scenario},{len(res.replans)},"
           f"{res.frames_fed},{res.frames_dropped},"
-          f"{100 * worst_err:.1f},{worst_headroom:.2f}")
+          f"{100 * worst_err:.1f},{worst_headroom:.2f},"
+          f"{len(res.over_cap_windows)}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--platform", default=None, choices=["mac", "x7"],
                     help="default: both Table III platforms")
-    ap.add_argument("--scenario", default=None,
-                    choices=["battery", "thermal"],
-                    help="default: both")
+    ap.add_argument("--scenario", default=None, choices=SCENARIOS,
+                    help="default: all")
     ap.add_argument("--time-scale", type=float, default=2e-6,
                     help="wall seconds per chain µs")
+    ap.add_argument("--lookahead", type=float, default=0.0,
+                    help="predictive re-planning horizon in scenario "
+                         "seconds (0 = reactive)")
     args = ap.parse_args()
     platforms = [args.platform] if args.platform else ["mac", "x7"]
-    scenarios = [args.scenario] if args.scenario else ["battery", "thermal"]
+    scenarios = [args.scenario] if args.scenario else list(SCENARIOS)
     for platform in platforms:
         for scenario in scenarios:
-            run_one(platform, scenario, args.time_scale)
+            run_one(platform, scenario, args.time_scale, args.lookahead)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,7 @@ root — the perf baseline CI guards against regressions (fail when the
 vectorized plan latency exceeds 2x the committed baseline, see
 ``--check``).
 
-Three measurement families:
+Four measurement families:
 
 - ``frontier``: ``pareto_frontier`` (nominal) and ``dvfs_frontier``
   (frequency-swept) end-to-end latency + frontier size, on the paper's
@@ -15,6 +15,11 @@ Three measurement families:
 - ``plan``: the governor's re-plan query ``min_period_under_power``
   against a prebuilt frontier (the cached-frontier fast path swapped at
   runtime) and cold (frontier rebuilt).
+- ``control``: the runtime control layer — a steady-state governor
+  ``observe`` tick (the per-window monitoring overhead, frontier cached)
+  and a full ``StreamingPipelineRuntime.rebuild`` swap (drain in-flight
+  frames, join workers, re-materialize, restart) on the DVB-S2 mac
+  pipeline.
 - ``speedup``: the headline — vectorized ``dvfs_frontier`` vs the pre-PR
   implementation (vendored below verbatim: per-profile unbatched
   ``herad_table`` fill, per-cell extraction + accounting sweep,
@@ -42,7 +47,10 @@ import numpy as np
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs.dvbs2 import RESOURCES, dvbs2_chain  # noqa: E402
+from repro.control import ConstantBudget, Governor, Observation  # noqa: E402
+from repro.control.sim import sleep_stage_builder  # noqa: E402
 from repro.core.chain import BIG, LITTLE, make_chain  # noqa: E402
+from repro.pipeline import StreamingPipelineRuntime  # noqa: E402
 from repro.core.dvfs import extract_dvfs_solution, scale_chain  # noqa: E402
 from repro.energy.account import energy  # noqa: E402
 from repro.energy.model import DEFAULT_POWER, PLATFORM_POWER, PowerModel  # noqa: E402
@@ -321,6 +329,36 @@ def run(smoke: bool) -> dict:
                 lambda: dvfs_frontier(chain, b, l, power), repeats),
         })
 
+    # control layer (ROADMAP PR 4 follow-up): governor tick cost and the
+    # runtime rebuild (drain) latency on the DVB-S2 mac half pipeline
+    ctl_chain = dvbs2_chain("mac")
+    ctl_power = PLATFORM_POWER["m1_ultra"]
+    ctl_b, ctl_l = RESOURCES["mac"]["half"]
+    gov = Governor(ctl_chain, ctl_b, ctl_l, ctl_power,
+                   ConstantBudget(1e9))
+    gov.start()
+    tick = Observation(t=1.0, period=gov.plan.predicted_period)
+    entries.append({
+        "bench": "control", "mode": "tick", "chain": "dvbs2-mac",
+        "platform": "m1_ultra", "n": ctl_chain.n, "b": ctl_b, "l": ctl_l,
+        "latency_ms": _best_ms(lambda: gov.observe(tick),
+                               max(repeats, 20)),
+    })
+    # rebuild: real threads — drain the pipe, join every worker,
+    # re-materialize the stage specs, restart (time_scale keeps the
+    # sleep-simulated stage work negligible next to the swap machinery)
+    rt = StreamingPipelineRuntime.from_plan(
+        gov.plan, sleep_stage_builder(ctl_chain, 1e-8, {}),
+        power=ctl_power)
+    rt.start()
+    rt.run(list(range(8)))
+    entries.append({
+        "bench": "control", "mode": "rebuild", "chain": "dvbs2-mac",
+        "platform": "m1_ultra", "n": ctl_chain.n, "b": ctl_b, "l": ctl_l,
+        "latency_ms": _best_ms(lambda: rt.rebuild(gov.plan), repeats),
+    })
+    rt.stop()
+
     # headline speedup: n=16, b=l=8, 3-level ladder, vectorized vs pre-PR
     chain = make_chain(np.random.default_rng(7), 16, 0.6)
     power = _dvfs_model(DEFAULT_POWER)
@@ -376,9 +414,12 @@ def check(result: dict, baseline_path: Path, factor: float = 2.0) -> int:
     runs, and `current prepr_ms / baseline prepr_ms` is how much slower
     (or faster) this host is than the one that produced the baseline.
     Sub-millisecond entries (the cached-frontier bisection queries) are
-    excluded — they measure timer jitter, not code. The machine-
-    independent headline speedup is additionally required to stay above
-    half its committed value.
+    excluded — they measure timer jitter, not code — and so are the
+    ``control`` entries: the rebuild swap is thread-join/scheduler bound,
+    which a CPU-bound calibration cannot normalize, so on a loaded runner
+    it would flake the gate (both are still recorded for trajectory).
+    The machine-independent headline speedup is additionally required to
+    stay above half its committed value.
     """
     baseline = json.loads(baseline_path.read_text())
     base = {_key(e): e for e in baseline.get("entries", [])}
@@ -389,7 +430,7 @@ def check(result: dict, baseline_path: Path, factor: float = 2.0) -> int:
     compared = 0
     for e in result["entries"]:
         ref = base.get(_key(e))
-        if ref is None or ref["latency_ms"] < 1.0:
+        if ref is None or ref["latency_ms"] < 1.0 or e["bench"] == "control":
             continue
         compared += 1
         if e["latency_ms"] > factor * scale * ref["latency_ms"]:

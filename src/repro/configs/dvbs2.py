@@ -123,15 +123,21 @@ def budget_presets(platform: str, resources: str = "half",
       - ``"constant"``: the high cap — steady state, no trigger;
       - ``"battery"``:  drain-to-empty over ``horizon_s`` seconds stepping
         high → mid → low as the charge falls (>= 2 forced re-plans);
+      - ``"metered_battery"``: the same capacity and levels, but closed
+        on the governor's *measured* energy (``MeteredBatteryBudget``):
+        the open-loop ``drain_w`` only seeds the projection, and each
+        call returns a fresh stateful instance;
       - ``"thermal"``:  high → mid at ``horizon_s/3``, recovering at
         ``2 * horizon_s / 3``.
 
-    Returns ``{"constant", "battery", "thermal"}`` plus ``"_levels"``,
-    the (hi, mid, low) watt triple the traces were built from.
+    Returns ``{"constant", "battery", "metered_battery", "thermal"}``
+    plus ``"_levels"``, the (hi, mid, low) watt triple the traces were
+    built from.
     """
     from repro.control.budget import (
         BatteryBudget,
         ConstantBudget,
+        MeteredBatteryBudget,
         ThermalThrottleBudget,
     )
     from repro.energy.pareto import pareto_frontier
@@ -147,6 +153,9 @@ def budget_presets(platform: str, resources: str = "half",
     return {
         "constant": ConstantBudget(hi),
         "battery": BatteryBudget(
+            capacity_j=hi * horizon_s, drain_w=hi,
+            levels=((0.65, hi), (0.35, mid), (0.0, low))),
+        "metered_battery": MeteredBatteryBudget(
             capacity_j=hi * horizon_s, drain_w=hi,
             levels=((0.65, hi), (0.35, mid), (0.0, low))),
         "thermal": ThermalThrottleBudget(

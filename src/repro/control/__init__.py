@@ -24,6 +24,7 @@ See docs/control.md for the governor state machine and trace formats.
 from .budget import (  # noqa: F401
     BatteryBudget,
     ConstantBudget,
+    MeteredBatteryBudget,
     PowerBudget,
     ScriptedBudget,
     ThermalThrottleBudget,

@@ -20,21 +20,48 @@ Triggers, in priority order at each :meth:`Governor.observe` tick:
   1. **device loss** (:meth:`Governor.device_loss`): the (b, l) budget
      shrank; the frontier is rebuilt for the new pool and the fastest
      point under the current cap is swapped in.
-  2. **cap**: the budget trace's ``cap_at(t)`` dropped below the active
-     plan's predicted draw — or rose enough that a faster frontier point
-     (by at least ``upshift_margin``) became admissible.
-  3. **drift**: the measured period strayed from the active plan's
+  2. **power**: the *measured* draw ``Observation.power_w`` exceeded the
+     cap by more than ``power_tolerance`` (hysteresis against metering
+     noise). The model said the plan fits; the meter disagrees — the
+     governor learns the measured/predicted draw ratio as a persistent
+     ``power_margin`` and re-selects the fastest point whose *derated*
+     prediction (``predicted_watts * power_margin``) fits, so the re-plan
+     converges in one step instead of thrashing.
+  3. **cap** / **predictive**: the admissible cap dropped below the
+     active plan's (margin-derated) predicted draw — or rose enough that
+     a faster frontier point (by at least ``upshift_margin``) became
+     admissible. With ``lookahead_s > 0`` the governor plans against the
+     *minimum* cap over the trace's ``change_times()`` within the
+     horizon: a scheduled drop (thermal throttle point, projected battery
+     threshold crossing) is adopted one look-ahead early, trigger
+     ``"predictive"``, so no control window ever straddles a transition
+     over-cap.
+  4. **drift**: the measured period strayed from the active plan's
      prediction by more than ``drift_tolerance`` (relative). The governor
-     then *recalibrates*: chain weights are rescaled by the measured /
-     predicted ratio (the uniform-slowdown model — e.g. co-located load or
-     wrong table entries), the frontier is rebuilt on the recalibrated
-     chain, and the fastest admissible point is re-selected. After
-     recalibration predictions match measurements, so a persistent bias
-     re-plans exactly once rather than every tick.
+     then *recalibrates*. When the observation carries per-stage measured
+     busy times (``Observation.stage_busy``) and ``stage_recalibration``
+     is on, each stage's tasks are rescaled by that stage's own
+     measured/predicted ratio (vector rescale), so a single hot stage
+     converges in one re-plan; otherwise chain weights are rescaled
+     uniformly by the period ratio (co-located load, globally wrong
+     tables). Either way the frontier is rebuilt on the recalibrated
+     chain and the fastest admissible point re-selected; predictions then
+     match measurements, so a persistent bias re-plans exactly once
+     rather than every tick.
+
+Measurement-based triggers (power, drift) skip the first observation
+after any adopted plan: the window it measured straddles the swap and
+mixes two plans' periods and draws, so acting on it would poison the
+recalibration.
 
 When no frontier point fits under the cap the governor falls back to the
 frugalest point (min power) and flags the event ``cap_met=False`` — shed
 throughput, keep the chain alive.
+
+Budgets that support it (``PowerBudget.record``, e.g.
+:class:`~repro.control.budget.MeteredBatteryBudget`) are fed every
+measured ``power_w`` window, closing the battery state of charge on
+metered energy instead of an assumed drain.
 
 Periods are in the chain's time unit (µs for the DVB-S2 tables); budget
 trace times are seconds of scenario clock; predicted draws are watts
@@ -48,6 +75,9 @@ deterministically.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
+
+import numpy as np
 
 from repro.core.chain import BIG, LITTLE, Solution, TaskChain
 from repro.core.dvfs import FreqSolution
@@ -62,6 +92,10 @@ from repro.energy.pareto import (
 
 from .budget import PowerBudget
 
+# sentinel: "the caller did not pre-select a point" (None is a valid
+# selection result meaning the cap is infeasible)
+_UNSELECTED = object()
+
 
 @dataclasses.dataclass(frozen=True)
 class Observation:
@@ -72,14 +106,22 @@ class Observation:
     ``power_w`` the measured average draw (None if the runtime is not
     metered); ``frames`` how many frames the window completed;
     ``dropped`` how many it lost to the liveness deadline. A window with
-    drops measured a degraded pipeline, not the workload — its period is
-    never trusted for drift recalibration."""
+    drops measured a degraded pipeline, not the workload — its period and
+    power are never trusted for recalibration.
+
+    ``stage_busy`` carries the runtime's per-stage measurement for
+    per-stage drift recalibration: stage name (the runtime's
+    ``s{start}-{end}``) to measured per-frame busy time in the *chain's
+    time unit* (the scenario harness aggregates the runtime's
+    per-(stage, replica) ``busy_s`` / ``replica_frames`` stats and
+    divides out its wall-clock ``time_scale``)."""
 
     t: float
     period: float
     power_w: float | None = None
     frames: int = 0
     dropped: int = 0
+    stage_busy: Mapping[str, float] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,8 +160,9 @@ class GovernorEvent:
     """One governor decision: which trigger fired and what was adopted."""
 
     t: float
-    trigger: str                 # "start" | "cap" | "drift" | "device_loss"
-    cap_w: float
+    # "start" | "power" | "cap" | "predictive" | "drift" | "device_loss"
+    trigger: str
+    cap_w: float                 # the planning cap the plan was picked under
     plan: ActivePlan
     cap_met: bool = True         # False: fell back to the min-power point
     detail: str = ""
@@ -132,9 +175,13 @@ class Governor:
     deviation that triggers recalibration; ``upshift_margin`` the minimum
     relative period improvement worth a swap when the cap rises (swap
     hysteresis — re-planning drains the pipe, so marginal gains are not
-    worth it). ``dvfs=True`` plans off the frequency-swept frontier
-    (per-stage DVFS levels, per-core-type ladders honored) instead of the
-    nominal one.
+    worth it); ``power_tolerance`` the relative measured-over-cap excess
+    that fires the power trigger (metering-noise hysteresis);
+    ``lookahead_s`` the predictive horizon over ``budget.change_times()``
+    (0 = reactive only); ``stage_recalibration`` enables the per-stage
+    drift rescale when observations carry ``stage_busy`` maps.
+    ``dvfs=True`` plans off the frequency-swept frontier (per-stage DVFS
+    levels, per-core-type ladders honored) instead of the nominal one.
     """
 
     def __init__(
@@ -148,6 +195,9 @@ class Governor:
         runtime=None,
         drift_tolerance: float = 0.25,
         upshift_margin: float = 0.1,
+        power_tolerance: float = 0.05,
+        lookahead_s: float = 0.0,
+        stage_recalibration: bool = True,
         dvfs: bool = False,
         freq_levels=None,
     ):
@@ -155,6 +205,10 @@ class Governor:
             raise ValueError("drift_tolerance must be positive")
         if upshift_margin < 0:
             raise ValueError("upshift_margin must be non-negative")
+        if power_tolerance < 0:
+            raise ValueError("power_tolerance must be non-negative")
+        if lookahead_s < 0:
+            raise ValueError("lookahead_s must be non-negative")
         self.chain = chain
         self.b = b
         self.l = l
@@ -163,10 +217,23 @@ class Governor:
         self.runtime = runtime
         self.drift_tolerance = drift_tolerance
         self.upshift_margin = upshift_margin
+        self.power_tolerance = power_tolerance
+        self.lookahead_s = lookahead_s
+        self.stage_recalibration = stage_recalibration
         self.dvfs = dvfs
         self.freq_levels = freq_levels
         self.events: list[GovernorEvent] = []
         self.calibration_scale = 1.0   # cumulative drift recalibration
+        # cumulative per-task drift rescale (vector recalibration trail)
+        self.task_scales = np.ones(chain.n)
+        # learned measured/predicted draw ratio: selections are admitted
+        # at cap / power_margin so a model that under-reports watts is
+        # corrected once, by measurement, instead of re-tripping the cap.
+        # Ratcheted up on an overshoot; walked back toward the measured
+        # ratio by clean in-cap windows, so a transient spike does not
+        # derate the governor forever (the upshift hysteresis tracks the
+        # derated admission cap and restores speed as the margin decays)
+        self.power_margin = 1.0
         self._frontier: list[ParetoPoint] | None = None
         # the (stage, type, level) candidate table shared across every
         # frontier rebuild: budgets are per-query, so device loss reuses
@@ -174,6 +241,9 @@ class Governor:
         self._candidates: CandidateTable | None = None
         self._plan: ActivePlan | None = None
         self._last_cap: float | None = None
+        # the first observation after any swap measured a window that
+        # straddles two plans; power/drift must not trust it
+        self._measurement_stale = False
 
     def attach(self, runtime) -> "Governor":
         """Wire a runtime in after materializing the initial plan:
@@ -225,44 +295,120 @@ class Governor:
 
     # ------------------------------------------------------------- control
     def start(self, t: float = 0.0) -> GovernorEvent:
-        """Adopt the fastest admissible plan under ``cap_at(t)``."""
+        """Adopt the fastest admissible plan under the planning cap at
+        ``t`` (the current cap, tightened by any scheduled drop within
+        the look-ahead horizon)."""
         if self._plan is not None:
             raise RuntimeError("governor already started")
-        return self._adopt(t, "start", self.budget.cap_at(t))
+        return self._adopt(t, "start",
+                           self._planning_cap(t, self.budget.cap_at(t)))
 
     def observe(self, obs: Observation) -> GovernorEvent | None:
         """One control tick; returns the event if a re-plan fired."""
         plan = self.plan  # raises if not started
+        if obs.power_w is not None:
+            # metered budgets integrate the measured draw into their
+            # state of charge before the cap for this tick is read; a
+            # lossy window's reading is garbage but its wall time is not
+            # — record it as "time passed, draw unknown" so the next
+            # trusted window's power is not stretched over the gap
+            self.budget.record(
+                obs.t, obs.power_w if obs.dropped == 0 else None)
         cap = self.budget.cap_at(obs.t)
+        eff = self._planning_cap(obs.t, cap)
+        stale = self._measurement_stale
+        self._measurement_stale = False
+        # measured/predicted draw of a trustworthy window, if any
+        ratio_w = None
+        if not stale and obs.dropped == 0 and obs.power_w is not None \
+                and plan.predicted_watts > 0:
+            ratio_w = obs.power_w / plan.predicted_watts
+        overshoot = ratio_w is not None \
+            and obs.power_w > cap * (1 + self.power_tolerance)
+        if ratio_w is not None and not overshoot \
+                and ratio_w < self.power_margin:
+            # a window consistent with the cap walks the learned margin
+            # back DOWN toward the measured ratio: a one-window transient
+            # spike must not derate every future plan forever. (Upward
+            # moves are the overshoot ratchet's job — nudging the margin
+            # up from sub-tolerance noise would sneak past the
+            # power_tolerance hysteresis via the cap branch.)
+            self.power_margin = max(
+                1.0, self.power_margin
+                + 0.5 * (ratio_w - self.power_margin))
         event = None
-        if plan.predicted_watts > cap * (1 + 1e-9):
+        if overshoot and plan.predicted_watts * self.power_margin \
+                <= cap * (1 + 1e-9):
+            # measured draw over a cap the model claims the plan fits:
+            # the meter overrules the model. (When the model itself is
+            # over — a cap drop — the cap branch below owns the event;
+            # learning a margin from that window would conflate a
+            # legitimate plan/cap mismatch with meter miscalibration.)
+            # Learn the measured/predicted ratio so the re-selection
+            # (and every later one) is derated by it — the re-plan
+            # converges in one step and metering noise below
+            # power_tolerance never thrashes.
+            self.power_margin = max(self.power_margin, ratio_w)
+            candidate = self._select(eff)
+            target = candidate if candidate is not None \
+                else self.frontier()[-1]
+            if target != plan.point:
+                event = self._adopt(
+                    obs.t, "power", eff,
+                    detail=f"measured {obs.power_w:.2f} W over cap "
+                           f"{cap:.2f} W; margin {self.power_margin:.3f}",
+                    point=candidate)
+        elif plan.predicted_watts * self.power_margin > eff * (1 + 1e-9):
             # re-plan only if the selection actually changes: under a
             # persistently infeasible cap the min-power fallback IS the
             # active plan, and re-adopting it every tick would spam
             # identical events without any swap
-            candidate = self._select(cap)
+            candidate = self._select(eff)
             target = candidate if candidate is not None \
                 else self.frontier()[-1]
             if target != plan.point:
-                event = self._adopt(obs.t, "cap", cap,
-                                    detail=f"cap dropped to {cap:.2f} W")
-        elif obs.dropped == 0 and self._drifted(obs.period):
+                if plan.predicted_watts * self.power_margin \
+                        > cap * (1 + 1e-9):
+                    event = self._adopt(
+                        obs.t, "cap", eff,
+                        detail=f"cap dropped to {cap:.2f} W",
+                        point=candidate)
+                else:
+                    # the current cap still fits; a scheduled drop within
+                    # the horizon does not — swap before it lands
+                    event = self._adopt(
+                        obs.t, "predictive", eff,
+                        detail=f"cap drops to {eff:.2f} W within "
+                               f"{self.lookahead_s:g} s",
+                        point=candidate)
+        elif not stale and obs.dropped == 0 and self._drifted(obs.period):
             # windows that lost frames to the liveness deadline measured
-            # a stalled pipeline, not the workload: rescaling the chain
-            # from one would poison every later prediction
+            # a stalled pipeline, and the first window after a swap mixes
+            # two plans: rescaling the chain from either would poison
+            # every later prediction
             ratio = obs.period / plan.predicted_period
-            self._recalibrate(ratio)
-            event = self._adopt(
-                obs.t, "drift", cap,
-                detail=f"measured/predicted period = {ratio:.3f}; "
-                       f"chain rescaled")
-        elif self._last_cap is not None and cap > self._last_cap * (1 + 1e-9):
-            candidate = self._select(cap)
+            detail = None
+            if self.stage_recalibration and obs.stage_busy:
+                detail = self._recalibrate_stages(obs)
+                if detail is not None:
+                    self.calibration_scale *= ratio
+            if detail is None:
+                self._recalibrate(ratio)
+                detail = f"measured/predicted period = {ratio:.3f}; " \
+                         f"chain rescaled"
+            event = self._adopt(obs.t, "drift", eff, detail=detail)
+        elif self._last_cap is not None \
+                and eff / self.power_margin > self._last_cap * (1 + 1e-9):
+            candidate = self._select(eff)
             if candidate is not None and candidate.period \
                     < plan.predicted_period * (1 - self.upshift_margin):
-                event = self._adopt(obs.t, "cap", cap,
-                                    detail=f"cap rose to {cap:.2f} W")
-        self._last_cap = cap
+                event = self._adopt(obs.t, "cap", eff,
+                                    detail=f"cap rose to {eff:.2f} W",
+                                    point=candidate)
+        # the hysteresis reference is the margin-derated ADMISSION cap:
+        # a decaying margin (or a rising cap) both widen it, so the
+        # upshift branch re-examines the frontier in either case
+        self._last_cap = eff / self.power_margin
         return event
 
     def device_loss(self, t: float, big: int = 0,
@@ -277,11 +423,25 @@ class Governor:
         self.b -= big
         self.l -= little
         self._frontier = None
-        return self._adopt(t, "device_loss", self.budget.cap_at(t),
-                           detail=f"lost {big}B+{little}L -> "
-                                  f"{self.b}B+{self.l}L")
+        return self._adopt(
+            t, "device_loss",
+            self._planning_cap(t, self.budget.cap_at(t)),
+            detail=f"lost {big}B+{little}L -> {self.b}B+{self.l}L")
 
     # ------------------------------------------------------------ internals
+    def _planning_cap(self, t: float, cap: float) -> float:
+        """The cap a plan adopted at ``t`` must fit: the current cap,
+        tightened by every scheduled change within the look-ahead horizon
+        (caps are piecewise-constant between ``change_times()``, so
+        sampling the change points covers the whole horizon)."""
+        if self.lookahead_s <= 0:
+            return cap
+        eff = cap
+        for tc in self.budget.change_times():
+            if t < tc <= t + self.lookahead_s:
+                eff = min(eff, self.budget.cap_at(tc))
+        return eff
+
     def _drifted(self, measured_period: float) -> bool:
         predicted = self._plan.predicted_period
         if predicted <= 0:
@@ -289,16 +449,16 @@ class Governor:
         return abs(measured_period - predicted) / predicted \
             > self.drift_tolerance
 
-    def _recalibrate(self, ratio: float):
-        """Rescale chain weights so predictions match measurements.
+    def _reweigh(self, ratios):
+        """Swap in a reweighted chain (scalar or per-task ``ratios``).
 
         The cached candidate table survives the recalibration: only its
         weight-derived arrays are rebuilt on the rescaled chain — ladders,
         power constants, and replicability structure carry over."""
-        self.calibration_scale *= ratio
+        self.task_scales = self.task_scales * ratios
         self.chain = TaskChain(
-            w_big=self.chain.w[BIG] * ratio,
-            w_little=self.chain.w[LITTLE] * ratio,
+            w_big=self.chain.w[BIG] * ratios,
+            w_little=self.chain.w[LITTLE] * ratios,
             replicable=self.chain.replicable,
             names=self.chain.names,
         )
@@ -306,15 +466,55 @@ class Governor:
             self._candidates = self._candidates.rescale(self.chain)
         self._frontier = None
 
+    def _recalibrate(self, ratio: float):
+        """Uniform-slowdown recalibration: every weight scaled alike."""
+        self.calibration_scale *= ratio
+        self._reweigh(ratio)
+
+    def _recalibrate_stages(self, obs: Observation) -> str | None:
+        """Per-stage recalibration: each active stage's tasks rescaled by
+        that stage's own measured/predicted busy ratio.
+
+        Uses the same stage naming as the runtime's StageSpecs, so the
+        measured map keys straight off ``run()`` stats. Returns the event
+        detail, or None when no stage carries a usable measurement (the
+        caller then falls back to the uniform model)."""
+        ratios = np.ones(self.chain.n)
+        hits: list[tuple[str, float]] = []
+        for st in self._plan.point.solution.stages:
+            measured = obs.stage_busy.get(f"s{st.start}-{st.end}")
+            if measured is None or measured <= 0:
+                continue
+            predicted = self.chain.stage_sum(st.start, st.end, st.ctype) \
+                / getattr(st, "freq", 1.0)
+            if predicted <= 0:
+                continue
+            ratio = measured / predicted
+            ratios[st.start:st.end + 1] = ratio
+            hits.append((f"s{st.start}-{st.end}", ratio))
+        if not hits:
+            return None
+        self._reweigh(ratios)
+        worst = max(hits, key=lambda h: abs(h[1] - 1.0))
+        return (f"per-stage recalibration over {len(hits)} stages; "
+                f"worst {worst[0]} x{worst[1]:.3f}")
+
     def _select(self, cap: float) -> ParetoPoint | None:
         return min_period_under_power(
-            self.chain, self.b, self.l, self.power, cap,
+            self.chain, self.b, self.l, self.power,
+            cap / self.power_margin,
             dvfs=self.dvfs, freq_levels=self.freq_levels,
             frontier=self.frontier())
 
     def _adopt(self, t: float, trigger: str, cap: float,
-               detail: str = "") -> GovernorEvent:
-        point = self._select(cap)
+               detail: str = "", point=_UNSELECTED) -> GovernorEvent:
+        """Adopt the fastest admissible point under ``cap``.
+
+        ``point`` short-circuits the selection when the caller already
+        ran it to decide whether to re-plan (pass the raw ``_select``
+        result — ``None`` still means "fall back to min power")."""
+        if point is _UNSELECTED:
+            point = self._select(cap)
         cap_met = point is not None
         if point is None:
             point = self.frontier()[-1]  # min-power fallback: shed speed
@@ -324,7 +524,8 @@ class Governor:
         self._plan = ActivePlan(self.chain, point)
         event = GovernorEvent(t, trigger, cap, self._plan, cap_met, detail)
         self.events.append(event)
-        self._last_cap = cap
+        self._last_cap = cap / self.power_margin
+        self._measurement_stale = True
         if self.runtime is not None and (
                 old is None
                 or old.point.solution != point.solution

@@ -17,9 +17,14 @@ Two clocks, deliberately decoupled:
 
 ``time_scale`` converts chain time units to simulated wall seconds (e.g.
 2e-6 runs a 1128 µs DVB-S2 period as ~2.3 ms per frame). Stage latency
-honors per-stage DVFS levels (sleep ∝ 1/f) and a drift knob that
-multiplies every sleep from a given window on — the measured-vs-predicted
-divergence the governor's recalibration trigger exists for.
+honors per-stage DVFS levels (sleep ∝ 1/f) and two drift knobs that apply
+from a given window on — a global multiplier on every sleep (uniform
+slowdown) and a per-task multiplier map (single hot task/stage) — the
+measured-vs-predicted divergences the governor's uniform and per-stage
+recalibration paths exist for. Metering can run off a *different* power
+model than the governor plans with (``meter_power``), which is how the
+measured-overshoot ("power" trigger) scenarios make the meter disagree
+with the model.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ from typing import Callable, Mapping, Sequence
 from repro.core.chain import TaskChain
 from repro.pipeline.runtime import StreamingPipelineRuntime
 
+from .budget import PowerBudget
 from .governor import Governor, GovernorEvent, Observation
 
 
@@ -41,22 +47,63 @@ def sleep_stage_builder(
 
     One replica executing tasks [start, end] per frame costs the stage
     sum on its core type, scaled by 1/freq for DVFS stages and by
-    ``time_scale`` into wall seconds. ``knobs['latency_scale']`` (default
-    1.0) multiplies every sleep — the harness's drift injector."""
+    ``time_scale`` into wall seconds. Two knobs inject drift at call
+    time (so a mid-stream change needs no rebuild):
+    ``knobs['latency_scale']`` (default 1.0) multiplies every sleep;
+    ``knobs['task_latency_scale']`` maps task index -> multiplier for
+    that task's share of its stage sum (the single-hot-stage injector
+    the per-stage recalibration scenarios use)."""
     knobs = knobs if knobs is not None else {}
 
     def build(start: int, end: int, stage) -> Callable:
         freq = getattr(stage, "freq", 1.0)
-        per_frame = chain.stage_sum(start, end, stage.ctype) \
-            * time_scale / freq
+        weights = [chain.w[stage.ctype][k] * time_scale / freq
+                   for k in range(start, end + 1)]
+        base = sum(weights)
 
         def fn(x):
+            per_frame = base
+            task_scale = knobs.get("task_latency_scale")
+            if task_scale:
+                per_frame += sum(
+                    w * (task_scale.get(k, 1.0) - 1.0)
+                    for k, w in zip(range(start, end + 1), weights))
             time.sleep(per_frame * knobs.get("latency_scale", 1.0))
             return x
 
         return fn
 
     return build
+
+
+def _stage_busy_units(stats: dict, time_scale: float) -> dict[str, float]:
+    """Per-stage measured per-frame busy time in chain units.
+
+    Aggregates the runtime's per-(stage, replica) busy seconds and
+    per-run frame counts: every frame is processed by exactly one replica
+    of a stage, so total busy / total frames is the per-frame single-core
+    latency of the stage interval — directly comparable to
+    ``chain.stage_sum(start, end, ctype) / freq``."""
+    busy: dict[str, float] = {}
+    frames: dict[str, int] = {}
+    for (name, _), s in stats.get("busy_s", {}).items():
+        busy[name] = busy.get(name, 0.0) + s
+    for (name, _), c in stats.get("replica_frames", {}).items():
+        frames[name] = frames.get(name, 0) + c
+    return {name: busy[name] / frames[name] / time_scale
+            for name in busy if frames.get(name, 0) > 0}
+
+
+def _min_cap_over(budget: PowerBudget, t0: float, t1: float) -> float:
+    """The lowest cap anywhere in [t0, t1): caps are piecewise-constant
+    between ``change_times()``, so sampling the window start plus every
+    change point inside covers the whole interval. This is the floor a
+    window's draw must respect for the zero-over-cap acceptance — the cap
+    at the window *start* misses mid-window drops."""
+    caps = [budget.cap_at(t0)]
+    caps += [budget.cap_at(tc) for tc in budget.change_times()
+             if t0 < tc < t1]
+    return min(caps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +119,16 @@ class WindowRecord:
     predicted_watts: float
     frames: int
     events: tuple[GovernorEvent, ...]  # governor decisions taken this window
+    # lowest cap anywhere inside the window: a scheduled drop mid-window
+    # makes this < cap_w, and the over-cap acceptance checks against it
+    min_cap_w: float = float("inf")
+
+    @property
+    def over_cap(self) -> bool:
+        """Did the active plan's predicted draw exceed the window's cap
+        floor? Deterministic (model-side) over-cap marker — a window that
+        straddles a scheduled drop without predictive re-planning."""
+        return self.predicted_watts > self.min_cap_w * (1 + 1e-9)
 
     @property
     def period_error(self) -> float:
@@ -97,6 +154,13 @@ class ScenarioResult:
     def replans(self) -> tuple[GovernorEvent, ...]:
         return tuple(e for e in self.events if e.trigger != "start")
 
+    @property
+    def over_cap_windows(self) -> tuple[WindowRecord, ...]:
+        """Windows whose plan was predicted over the window's cap floor
+        (straddled a scheduled drop) — empty under predictive
+        re-planning."""
+        return tuple(w for w in self.windows if w.over_cap)
+
     def describe(self) -> str:
         lines = [f"{len(self.windows)} windows, {self.frames_fed} frames "
                  f"({self.frames_dropped} dropped), "
@@ -121,7 +185,8 @@ def run_scenario(
     warmup: int = 8,
     queue_depth: int = 4,
     device_loss_at: Mapping[int, tuple[int, int]] | None = None,
-    drift_at: Sequence[tuple[int, float]] = (),
+    drift_at: Sequence[tuple[int, float | Mapping[int, float]]] = (),
+    meter_power=None,
 ) -> ScenarioResult:
     """Drive ``governor`` end to end against a sleep-simulated runtime.
 
@@ -131,8 +196,15 @@ def run_scenario(
     frames that must respect it), then scripted device losses
     (``device_loss_at[window] = (big, little)``), then
     ``frames_per_window`` frames through the runtime. ``drift_at`` is a
-    list of (window, latency multiplier) knob settings — the injected
-    slowdowns the drift trigger must catch.
+    list of (window, slowdown) knob settings — the injected slowdowns the
+    drift trigger must catch; a float slows every sleep uniformly, a
+    ``{task_index: multiplier}`` map slows only those tasks (the
+    single-hot-stage case per-stage recalibration converges on).
+
+    ``meter_power`` (default: the governor's own model) is the power
+    model the runtime *meters* with: passing a hotter model makes the
+    measured draw exceed the planner's predictions — the
+    measured-overshoot scenario behind the governor's "power" trigger.
     """
     base_chain = governor.chain
     knobs: dict = {"latency_scale": 1.0}
@@ -140,7 +212,7 @@ def run_scenario(
     governor.start(0.0)
     runtime = StreamingPipelineRuntime.from_plan(
         governor.plan, builder, queue_depth=queue_depth,
-        power=governor.power)
+        power=meter_power if meter_power is not None else governor.power)
     governor.attach(runtime)
     runtime.start()
 
@@ -160,12 +232,17 @@ def run_scenario(
                     power_w=prev_stats.get("avg_power_w"),
                     frames=len(prev_stats["outputs"]),
                     dropped=prev_stats.get("frames_dropped", 0),
+                    stage_busy=_stage_busy_units(prev_stats, time_scale),
                 ))
             if w in device_loss_at:
                 big, little = device_loss_at[w]
                 governor.device_loss(t, big=big, little=little)
             if w in drift_schedule:
-                knobs["latency_scale"] = drift_schedule[w]
+                slow = drift_schedule[w]
+                if isinstance(slow, Mapping):
+                    knobs["task_latency_scale"] = dict(slow)
+                else:
+                    knobs["latency_scale"] = slow
             # liveness deadline: a stalled swap (lost sentinel, dead
             # workers) surfaces as dropped frames, not a hung scenario —
             # 10x the active plan's expected window duration, floored
@@ -188,6 +265,7 @@ def run_scenario(
                 predicted_watts=plan.predicted_watts,
                 frames=len(stats["outputs"]),
                 events=tuple(governor.events[n_before:]),
+                min_cap_w=_min_cap_over(governor.budget, t, t + window_dt),
             ))
             prev_stats = stats
             if stats["frames_dropped"] > 0:

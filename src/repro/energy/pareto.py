@@ -18,7 +18,8 @@ mirroring the lexicographic-min-as-elementwise-select recipe documented in
   :func:`repro.energy.account.stage_energy_terms` arithmetic the
   accounting report uses. Frontier refinement and governor re-planning
   reuse one table across all ``p_max`` queries; drift recalibration only
-  rescales the weights (:meth:`CandidateTable.rescale`).
+  rescales the weights (:meth:`CandidateTable.rescale` — uniformly, or
+  per task for the governor's per-stage recalibration).
 
 - :func:`min_energy_under_period` / :func:`min_energy_under_period_freq`
   (strategy names ``"energad"`` / ``"freqherad"``): exact min-sum DPs over
@@ -227,11 +228,14 @@ class CandidateTable:
     def rescale(self, chain: TaskChain) -> "CandidateTable":
         """The same table on a reweighted chain (drift recalibration).
 
-        Only the weight-derived ``works`` arrays are rebuilt (from the
-        new chain's prefix sums, so the result is bit-identical to a
-        fresh build) — ladders, power constants, and the replicability
-        structure carry over as-is. The chain must have the same length
-        and replicable partition."""
+        The new chain's task weights are arbitrary — a uniform slowdown
+        multiplies every weight alike, the governor's *per-stage* drift
+        recalibration applies a different factor per task (vector
+        rescale); both land here. Only the weight-derived ``works``
+        arrays are rebuilt (from the new chain's prefix sums, so the
+        result is bit-identical to a fresh build) — ladders, power
+        constants, and the replicability structure carry over as-is. The
+        chain must have the same length and replicable partition."""
         if chain.n != self.chain.n or \
                 not np.array_equal(chain.replicable, self.chain.replicable):
             raise ValueError("rescale needs an equal-structure chain")

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import current_ctx, scan_unroll
+from repro.sharding import current_ctx, scan_unroll, shard_map
 
 _NEG = -1e30
 
@@ -198,7 +198,7 @@ def context_attention(q, k, v, *, causal=True, window=0) -> jax.Array:
         q_off = jax.lax.axis_index(axis) * qq.shape[1]
         return local(qq, kk, vv, q_off)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+    return shard_map(f, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
                          out_specs=qspec)(q, k, v)
 
 
@@ -264,7 +264,7 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=0) -> jax.Array:
         den = jax.lax.psum(wl, axes)
         return num / jnp.maximum(den, 1e-30)[..., None]
 
-    o = jax.shard_map(f, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
+    o = shard_map(f, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
                       out_specs=qspec)(q, k_cache, v_cache, pos)
     return o.reshape(b, hq, d).astype(q.dtype)
 

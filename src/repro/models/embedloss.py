@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import current_ctx, scan_unroll
+from repro.sharding import current_ctx, scan_unroll, shard_map
 
 _NEG = -1e30
 
@@ -63,7 +63,7 @@ def embed_in(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
         return out.astype(compute_dtype)
 
     out_spec = P(bspec, axis if seq_ok else None, None)
-    return jax.shard_map(
+    return shard_map(
         f, mesh=ctx.mesh, in_specs=(P(axis, None), P(bspec, None)),
         out_specs=out_spec)(table, tokens)
 
@@ -154,7 +154,7 @@ def _lm_loss_fwd_impl(x, table, labels, valid, seq_chunk, axis):
             n = jax.lax.psum(n, batch_axes)
         return tot / jnp.maximum(n, 1.0)
 
-    loss = jax.shard_map(
+    loss = shard_map(
         f, mesh=ctx.mesh,
         in_specs=(xspec, P(axis, None), P(bspec, None)),
         out_specs=P())(x, table, labels)
@@ -212,7 +212,7 @@ def _lm_loss_bwd_impl(valid, seq_chunk, axis, res, g):
             gt = jax.lax.psum(gt, batch_axes)
         return gx.astype(x.dtype), gt.astype(table.dtype)
 
-    gx, gt = jax.shard_map(
+    gx, gt = shard_map(
         f, mesh=ctx.mesh,
         in_specs=(xspec, P(axis, None), P(bspec, None), P()),
         out_specs=(xspec, P(axis, None)))(x, table, labels,
@@ -249,7 +249,7 @@ def greedy(x: jax.Array, table: jax.Array,
         tok = jnp.where(val >= gbest, best + lo, -1)
         return jax.lax.pmax(tok, axis).astype(jnp.int32)
 
-    return jax.shard_map(f, mesh=ctx.mesh,
+    return shard_map(f, mesh=ctx.mesh,
                          in_specs=(P(bspec, None), P(axis, None)),
                          out_specs=P(bspec))(x, table)
 

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import MoEConfig
-from repro.sharding import current_ctx
+from repro.sharding import current_ctx, shard_map
 
 
 def route(x2d: jax.Array, w_router: jax.Array, top_k: int):
@@ -154,7 +154,7 @@ def moe_apply(x: jax.Array, params, cfg: MoEConfig) -> jax.Array:
             y = _combine(out, slot, weights, t, d)
             return y.reshape(bl, sl, d).astype(xx.dtype)
 
-        return jax.shard_map(
+        return shard_map(
             f_a2a, mesh=mesh, in_specs=(xspec, *wspec), out_specs=xspec,
         )(x, params["router"], params["w_gate"], params["w_up"],
           params["w_down"])
@@ -183,7 +183,7 @@ def moe_apply(x: jax.Array, params, cfg: MoEConfig) -> jax.Array:
         y = jax.lax.psum(y.astype(jnp.float32), axis)
         return y.reshape(bl, sl, d).astype(xx.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         f_psum, mesh=mesh, in_specs=(xspec, *wspec), out_specs=xspec,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
@@ -229,7 +229,7 @@ def _moe_decode_2d(x, params, cfg: MoEConfig, e_axes, f_axes):
         y = jax.lax.psum(y.astype(jnp.float32), all_axes)
         return y.reshape(bl, sl, d).astype(xx.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh, in_specs=(xspec, *wspec), out_specs=xspec,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
@@ -269,6 +269,6 @@ def _moe_psum_multi(x, params, cfg: MoEConfig, axes, bspec):
         y = jax.lax.psum(y.astype(jnp.float32), tuple(axes))
         return y.reshape(bl, sl, d).astype(xx.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh, in_specs=(xspec, *wspec), out_specs=xspec,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])

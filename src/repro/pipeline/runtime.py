@@ -163,6 +163,7 @@ class StreamingPipelineRuntime:
         if not self._started:
             self.start()
         busy0 = dict(self._busy_s)  # meter this run only, not prior runs
+        counts0 = dict(self._replica_counts)
         t0 = time.perf_counter()
         marks = {}
         sink = self._queues[-1]
@@ -207,6 +208,13 @@ class StreamingPipelineRuntime:
         total_s = marks["end"] - t0
         busy_s = {k: v - busy0.get(k, 0.0) for k, v in self._busy_s.items()
                   if v - busy0.get(k, 0.0) > 0.0}
+        # frames each (stage, replica) processed during THIS run — the
+        # per-window denominator the governor's per-stage drift
+        # recalibration divides busy_s by ("replica_counts" stays the
+        # lifetime accumulation)
+        replica_frames = {
+            k: v - counts0.get(k, 0) for k, v in self._replica_counts.items()
+            if v - counts0.get(k, 0) > 0}
         stats = {
             "outputs": [o for _, o in outs],
             "seq_ids": [s for s, _ in outs],
@@ -215,6 +223,7 @@ class StreamingPipelineRuntime:
             "period_s": steady / max(n_steady, 1),
             "throughput_fps": max(n_steady, 1) / steady if steady > 0 else 0.0,
             "replica_counts": dict(self._replica_counts),
+            "replica_frames": replica_frames,
             "busy_s": busy_s,
         }
         if any(s.busy_watts or s.idle_watts for s in self.stages):

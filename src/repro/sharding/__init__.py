@@ -8,5 +8,6 @@ from .rules import (  # noqa: F401
     scan_unroll,
     set_ctx,
     shard,
+    shard_map,
     use_ctx,
 )
