@@ -9,7 +9,10 @@ dropped frames, worst period error, worst cap-floor headroom, over-cap
 window count). ``--lookahead`` enables predictive re-planning — with a
 one-window horizon the over-cap count drops to zero on the traces whose
 steps land mid-window. Follows benchmarks/run.py's ``name,...`` CSV
-contract.
+contract. ``--trace DIR`` additionally writes one Perfetto-loadable
+``DIR/<platform>_<scenario>.trace.json`` per run (frame spans per stage
+replica, governor decision instants, cap/power/SoC counter tracks —
+open in https://ui.perfetto.dev or summarize with tools/trace_report.py).
 
   PYTHONPATH=src python benchmarks/control_scenarios.py
   PYTHONPATH=src python benchmarks/control_scenarios.py --platform x7 \
@@ -33,24 +36,32 @@ from repro.configs.dvbs2 import (  # noqa: E402
     platform_power,
 )
 from repro.control import Governor, run_scenario  # noqa: E402
+from repro.obs import Tracer, write_perfetto  # noqa: E402
 
 HORIZON_S = 9.0
 SCENARIOS = ["battery", "metered_battery", "thermal"]
 
 
 def run_one(platform: str, scenario: str, time_scale: float,
-            lookahead_s: float) -> None:
+            lookahead_s: float, trace_dir: str | None = None) -> None:
     chain = dvbs2_chain(platform)
     power = platform_power(platform)
     b, l = RESOURCES[platform]["half"]
     budget = budget_presets(platform, "half", horizon_s=HORIZON_S)[scenario]
     gov = Governor(chain, b, l, power, budget, lookahead_s=lookahead_s)
+    tracer = Tracer() if trace_dir is not None else None
     # the metered battery outlives the open-loop projection when the
     # governor downshifts (less drain than assumed): give it headroom
     n_windows = int(HORIZON_S) + (3 if scenario == "metered_battery" else 0)
     res = run_scenario(gov, time_scale=time_scale,
                        n_windows=n_windows, window_dt=1.0,
-                       frames_per_window=30)
+                       frames_per_window=30, tracer=tracer)
+    if tracer is not None:
+        os.makedirs(trace_dir, exist_ok=True)
+        path = os.path.join(trace_dir,
+                            f"{platform}_{scenario}.trace.json")
+        write_perfetto(tracer.drain(), path)
+        print(f"# trace written to {path}", file=sys.stderr)
     print(f"# {scenario} on {platform} (b={b}, l={l}, "
           f"time_scale={time_scale:g}, lookahead={lookahead_s:g})")
     print("control,platform,scenario,window,t_s,cap_w,cap_floor_w,"
@@ -86,12 +97,16 @@ def main() -> None:
     ap.add_argument("--lookahead", type=float, default=0.0,
                     help="predictive re-planning horizon in scenario "
                          "seconds (0 = reactive)")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write a Perfetto trace.json per (platform, "
+                         "scenario) run into DIR")
     args = ap.parse_args()
     platforms = [args.platform] if args.platform else ["mac", "x7"]
     scenarios = [args.scenario] if args.scenario else list(SCENARIOS)
     for platform in platforms:
         for scenario in scenarios:
-            run_one(platform, scenario, args.time_scale, args.lookahead)
+            run_one(platform, scenario, args.time_scale, args.lookahead,
+                    trace_dir=args.trace)
 
 
 if __name__ == "__main__":

@@ -13,8 +13,15 @@ step (trigger "predictive"), so no window ever straddles a drop over
 budget, and the battery trace is closed on the measured energy the
 runtime actually drew.
 
+``--trace trace.json`` records the cap-drop + core-loss run through
+``repro.obs`` and writes a Perfetto-loadable trace — one row per stage
+replica with a span per frame, governor decision instants labelled by
+trigger, and cap_w / power_w / battery counter tracks. Open it in
+https://ui.perfetto.dev or summarize with ``tools/trace_report.py``.
+
   PYTHONPATH=src python examples/adaptive_governor.py
   PYTHONPATH=src python examples/adaptive_governor.py --platform x7
+  PYTHONPATH=src python examples/adaptive_governor.py --trace trace.json
   PYTHONPATH=src python examples/adaptive_governor.py --smoke   # CI: fast;
         # exit 1 unless the battery scenario forces >= 2 re-plans with
         # zero windows over their cap floor, the overshoot scenario fires
@@ -41,6 +48,7 @@ from repro.control import (  # noqa: E402
     run_scenario,
 )
 from repro.energy import CoreTypePower, PowerModel  # noqa: E402
+from repro.obs import Tracer, write_perfetto  # noqa: E402
 
 PERIOD_TOLERANCE = 0.25
 LOOKAHEAD_S = 1.0   # one control window of predictive horizon
@@ -146,7 +154,8 @@ def power_overshoot(platform: str, time_scale: float) -> list[str]:
     return problems
 
 
-def cap_drop_and_core_loss(platform: str, time_scale: float) -> list[str]:
+def cap_drop_and_core_loss(platform: str, time_scale: float,
+                           trace_path: str | None = None) -> list[str]:
     """The headline survival story: an operator cap drop at t=2 s
     (adopted one window early by the predictive trigger) and the loss of
     a little core at t=4 s, < 2 dropped frames end to end."""
@@ -157,10 +166,15 @@ def cap_drop_and_core_loss(platform: str, time_scale: float) -> list[str]:
     budget = ScriptedBudget(((0.0, hi), (2.0, mid)))
     print(f"\n=== cap drop + little-core loss on {platform} "
           f"(b={b}, l={l}) ===")
+    tracer = Tracer() if trace_path is not None else None
     gov = Governor(chain, b, l, power, budget, lookahead_s=LOOKAHEAD_S)
     res = run_scenario(gov, time_scale=time_scale, n_windows=6,
                        window_dt=1.0, frames_per_window=30,
-                       device_loss_at={4: (0, 1)})
+                       device_loss_at={4: (0, 1)}, tracer=tracer)
+    if tracer is not None:
+        write_perfetto(tracer.drain(), trace_path)
+        print(f"  -> trace written to {trace_path} "
+              f"(load in ui.perfetto.dev or run tools/trace_report.py)")
     print(res.describe())
     _print_windows(res)
     print(f"  -> fed {res.frames_fed}, delivered {res.frames_delivered}, "
@@ -179,13 +193,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: run all scenarios and exit 1 on any "
                          "acceptance violation")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto trace.json of the cap-drop + "
+                         "core-loss scenario to PATH")
     args = ap.parse_args()
     if args.time_scale is None:
         args.time_scale = 4e-6 if args.smoke else 2e-6
 
     problems = battery_scenario(args.platform, args.time_scale)
     problems += power_overshoot(args.platform, args.time_scale)
-    problems += cap_drop_and_core_loss(args.platform, args.time_scale)
+    problems += cap_drop_and_core_loss(args.platform, args.time_scale,
+                                       trace_path=args.trace)
     if problems:
         print("\nACCEPTANCE VIOLATIONS:")
         for p in problems:

@@ -34,6 +34,19 @@ import dataclasses
 class PowerBudget:
     """Interface: a power cap trace P_max(t) in watts over seconds."""
 
+    def attach_tracer(self, tracer) -> "PowerBudget":
+        """Attach a ``repro.obs.Tracer`` so stateful budgets can emit
+        counter samples (``battery/soc``, ``battery/drain_est_w``) from
+        :meth:`record`. Open-loop traces accept and ignore it. Uses
+        ``object.__setattr__`` so the frozen trace dataclasses accept
+        the attachment too; returns ``self`` for chaining."""
+        object.__setattr__(self, "_tracer", tracer)
+        return self
+
+    @property
+    def tracer(self):
+        return getattr(self, "_tracer", None)
+
     def cap_at(self, t: float) -> float:
         raise NotImplementedError
 
@@ -252,8 +265,16 @@ class MeteredBatteryBudget(PowerBudget):
 
     ``levels`` follows :class:`BatteryBudget` (strictly descending
     thresholds ending at 0.0, non-increasing positive caps).
-    ``smoothing`` is the EWMA weight of the newest window in the drain
-    estimate (1.0 = last window only, small = long memory).
+
+    The drain estimate is a *duration-weighted* EWMA: ``smoothing`` is
+    the weight a one-second window contributes, and a window of ``dt``
+    seconds contributes ``1 - (1 - smoothing)**dt`` — so a 100 ms
+    window nudges the estimate ~10x less than a 1 s one, and two
+    back-to-back windows at the same draw move it exactly as far as one
+    window of their combined duration. Without the weighting, a single
+    short glitchy window would swing the projected ``change_times()``
+    as hard as a long clean one (``smoothing=1.0`` still means "last
+    window only" for any positive duration).
     """
 
     def __init__(self, capacity_j: float, drain_w: float,
@@ -298,10 +319,21 @@ class MeteredBatteryBudget(PowerBudget):
             # estimate itself untouched
             self._consumed_j += self._drain_est * dt
             self._t = t
+            self._emit_counters(t)
             return
         self._consumed_j += power_w * dt
         self._t = t
-        self._drain_est += self.smoothing * (power_w - self._drain_est)
+        # duration-weighted EWMA: a dt-second window carries the weight
+        # of dt consecutive one-second windows at the same draw
+        weight = 1.0 - (1.0 - self.smoothing) ** dt
+        self._drain_est += weight * (power_w - self._drain_est)
+        self._emit_counters(t)
+
+    def _emit_counters(self, t: float) -> None:
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.counter("battery/soc", self.soc_at(t))
+            tracer.counter("battery/drain_est_w", self._drain_est)
 
     def soc_at(self, t: float) -> float:
         """State of charge in [0, 1]: integrated consumption, projected

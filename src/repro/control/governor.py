@@ -200,6 +200,7 @@ class Governor:
         stage_recalibration: bool = True,
         dvfs: bool = False,
         freq_levels=None,
+        tracer=None,
     ):
         if drift_tolerance <= 0:
             raise ValueError("drift_tolerance must be positive")
@@ -222,6 +223,10 @@ class Governor:
         self.stage_recalibration = stage_recalibration
         self.dvfs = dvfs
         self.freq_levels = freq_levels
+        # optional repro.obs.Tracer: decision instants from every adopt,
+        # cap_w / power_w / predicted_w / power_margin counter samples
+        # from every metered observe tick (docs/observability.md)
+        self.tracer = tracer
         self.events: list[GovernorEvent] = []
         self.calibration_scale = 1.0   # cumulative drift recalibration
         # cumulative per-task drift rescale (vector recalibration trail)
@@ -316,6 +321,11 @@ class Governor:
                 obs.t, obs.power_w if obs.dropped == 0 else None)
         cap = self.budget.cap_at(obs.t)
         eff = self._planning_cap(obs.t, cap)
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.counter("cap_w", cap)
+            if obs.power_w is not None:
+                tracer.counter("power_w", obs.power_w)
         stale = self._measurement_stale
         self._measurement_stale = False
         # measured/predicted draw of a trustworthy window, if any
@@ -409,6 +419,9 @@ class Governor:
         # a decaying margin (or a rising cap) both widen it, so the
         # upshift branch re-examines the frontier in either case
         self._last_cap = eff / self.power_margin
+        if tracer is not None and tracer.enabled:
+            tracer.counter("predicted_w", self._plan.predicted_watts)
+            tracer.counter("power_margin", self.power_margin)
         return event
 
     def device_loss(self, t: float, big: int = 0,
@@ -524,6 +537,17 @@ class Governor:
         self._plan = ActivePlan(self.chain, point)
         event = GovernorEvent(t, trigger, cap, self._plan, cap_met, detail)
         self.events.append(event)
+        if self.tracer is not None and self.tracer.enabled:
+            # wall-clock instant on the trace timeline; the scenario-time
+            # decision stamp rides along as t_s
+            self.tracer.instant(
+                f"governor/{trigger}", cat="governor",
+                args={"trigger": trigger, "t_s": t, "cap_w": cap,
+                      "cap_met": cap_met,
+                      "period_us": self._plan.predicted_period,
+                      "watts": self._plan.predicted_watts,
+                      "power_margin": self.power_margin,
+                      "detail": detail})
         self._last_cap = cap / self.power_margin
         self._measurement_stale = True
         if self.runtime is not None and (

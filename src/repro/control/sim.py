@@ -187,6 +187,8 @@ def run_scenario(
     device_loss_at: Mapping[int, tuple[int, int]] | None = None,
     drift_at: Sequence[tuple[int, float | Mapping[int, float]]] = (),
     meter_power=None,
+    tracer=None,
+    metrics=None,
 ) -> ScenarioResult:
     """Drive ``governor`` end to end against a sleep-simulated runtime.
 
@@ -205,14 +207,30 @@ def run_scenario(
     model the runtime *meters* with: passing a hotter model makes the
     measured draw exceed the planner's predictions — the
     measured-overshoot scenario behind the governor's "power" trigger.
+
+    ``tracer`` (a ``repro.obs.Tracer``) threads the whole scenario
+    through the tracing layer: runtime frame spans, governor decision
+    instants and cap/power counters, battery SoC samples, plus one
+    wall-clock ``"window"`` span per control window (cat ``"window"``,
+    args carrying the WindowRecord fields incl. ``over_cap``) — drain
+    it into ``repro.obs.export.write_perfetto`` for a Perfetto
+    timeline. ``metrics`` (a ``repro.obs.MetricsRegistry``) aggregates
+    the same windows into counters (frames fed/delivered/dropped,
+    re-plans) and histograms (``scenario/period_us``,
+    ``scenario/period_err``, ``scenario/power_w``).
     """
     base_chain = governor.chain
     knobs: dict = {"latency_scale": 1.0}
     builder = sleep_stage_builder(base_chain, time_scale, knobs)
+    if tracer is not None:
+        if governor.tracer is None:
+            governor.tracer = tracer
+        governor.budget.attach_tracer(tracer)
     governor.start(0.0)
     runtime = StreamingPipelineRuntime.from_plan(
         governor.plan, builder, queue_depth=queue_depth,
-        power=meter_power if meter_power is not None else governor.power)
+        power=meter_power if meter_power is not None else governor.power,
+        tracer=tracer)
     governor.attach(runtime)
     runtime.start()
 
@@ -249,13 +267,14 @@ def run_scenario(
             # well above scheduler noise
             expected_s = frames_per_window \
                 * governor.plan.predicted_period * time_scale
+            t_wall0 = time.perf_counter()
             stats = runtime.run(list(range(frames_per_window)),
                                 warmup=min(warmup, frames_per_window - 1),
                                 timeout_s=max(5.0, 10.0 * expected_s))
             fed += frames_per_window
             delivered += len(stats["outputs"])
             plan = governor.plan
-            windows.append(WindowRecord(
+            rec = WindowRecord(
                 index=w,
                 t=t,
                 cap_w=governor.budget.cap_at(t),
@@ -266,7 +285,32 @@ def run_scenario(
                 frames=len(stats["outputs"]),
                 events=tuple(governor.events[n_before:]),
                 min_cap_w=_min_cap_over(governor.budget, t, t + window_dt),
-            ))
+            )
+            windows.append(rec)
+            if tracer is not None and tracer.enabled:
+                tracer.complete(
+                    "window", t_wall0, time.perf_counter() - t_wall0,
+                    cat="window",
+                    args={"index": w, "t_s": t, "cap_w": rec.cap_w,
+                          "min_cap_w": rec.min_cap_w,
+                          "predicted_w": rec.predicted_watts,
+                          "measured_w": rec.measured_watts,
+                          "over_cap": rec.over_cap,
+                          "period_us": rec.measured_period,
+                          "frames": rec.frames})
+            if metrics is not None:
+                metrics.inc("scenario/frames_fed", frames_per_window)
+                metrics.inc("scenario/frames_delivered",
+                            len(stats["outputs"]))
+                metrics.inc("scenario/frames_dropped",
+                            stats["frames_dropped"])
+                metrics.inc("scenario/replans", sum(
+                    1 for e in rec.events if e.trigger != "start"))
+                metrics.observe("scenario/period_us", rec.measured_period)
+                metrics.observe("scenario/period_err", rec.period_error)
+                if rec.measured_watts:
+                    metrics.observe("scenario/power_w", rec.measured_watts)
+                metrics.set_gauge("scenario/cap_w", rec.cap_w)
             prev_stats = stats
             if stats["frames_dropped"] > 0:
                 # a timed-out window leaves stragglers in flight; rebuild

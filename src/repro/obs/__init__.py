@@ -1,0 +1,29 @@
+"""Observability: structured tracing, metrics, and trace exporters.
+
+The measurement layer under everything else in the repo: the paper's
+claims are about *measured* period and energy, so the runtime, governor,
+simulator and serve engine all need a cheap way to say what happened and
+when. This package provides it without importing anything above it —
+call sites receive a :class:`Tracer` / :class:`MetricsRegistry` by
+argument (duck-typed, optional, default off), so the layering in
+``docs/architecture.md`` is unchanged.
+
+  - :mod:`repro.obs.trace`   — :class:`Tracer`: monotonic-clock spans,
+    instants and counter samples recorded into per-thread ring buffers
+    (no locks on the hot path, bounded memory, explicit :meth:`drain`);
+  - :mod:`repro.obs.metrics` — :class:`MetricsRegistry`: plain-dict
+    counters, gauges and windowed histograms (p50/p95/p99);
+  - :mod:`repro.obs.export`  — Chrome/Perfetto ``trace.json`` writer
+    (thread-per-replica rows, counter tracks) + loader;
+  - :mod:`repro.obs.report`  — trace analysis (per-stage utilization,
+    replica imbalance, rebuild stall, over-cap intervals) behind the
+    ``tools/trace_report.py`` CLI.
+
+See docs/observability.md for the event/metric catalog and overhead
+numbers (``benchmarks/sched_perf.py`` gates the tracer at <5% period
+inflation on the threaded runtime hot path).
+"""
+from .export import load_trace, to_chrome_events, write_perfetto  # noqa: F401
+from .metrics import MetricsRegistry  # noqa: F401
+from .report import TraceReport, analyze_trace  # noqa: F401
+from .trace import NULL_TRACER, TraceEvent, Tracer  # noqa: F401

@@ -1,0 +1,183 @@
+"""Trace analysis: turn an exported ``trace.json`` back into numbers.
+
+The reporting half of the observability layer: load a Chrome/Perfetto
+trace written by :func:`repro.obs.export.write_perfetto` and compute
+
+  - **per-stage utilization** — busy fraction of each stage's replica
+    rows over the trace extent (frame-span durations summed per stage,
+    divided by replicas x extent);
+  - **replica imbalance** — max/mean frames processed across a stage's
+    replicas (work stealing should keep this near 1; a straggler shows
+    up as the *other* replicas' ratio rising);
+  - **rebuild stall time** — total duration of ``runtime/rebuild``
+    drain-gap spans (the stop-the-world window the ROADMAP's
+    zero-drain-rebuild direction wants to eliminate);
+  - **governor decisions** — every re-plan instant with trigger label;
+  - **over-cap intervals** — scenario windows whose active plan was
+    predicted over the window's cap floor (the same definition as
+    ``ScenarioResult.over_cap_windows``), plus measured ``power_w``
+    counter samples above the ``cap_w`` track.
+
+Event conventions consumed here (see docs/observability.md for the full
+catalog): frame spans are ``ph=X, cat="frame"`` named by stage on
+``{stage}/r{i}`` thread rows; rebuild spans ``ph=X`` named
+``runtime/rebuild``; governor decisions ``ph=i, cat="governor"``;
+scenario windows ``ph=X, cat="window"`` with an ``over_cap`` arg.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StageStats:
+    name: str
+    replicas: int
+    frames: int
+    busy_s: float
+    utilization: float           # busy_s / (replicas * extent_s)
+    imbalance: float             # max frames per replica / mean
+    mean_queue_wait_s: float     # mean per-frame wait_s arg, 0 if absent
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReport:
+    extent_s: float              # wall span covered by frame/window spans
+    stages: tuple[StageStats, ...]
+    rebuild_count: int
+    rebuild_stall_s: float       # total drain-gap time
+    decisions: tuple[dict, ...]  # governor instants, ts-ordered
+    over_cap_windows: int        # window spans flagged over their cap floor
+    over_cap_s: float            # total duration of those windows
+    over_cap_power_samples: int  # measured power_w samples above cap_w
+
+    def describe(self) -> str:
+        lines = [f"trace extent {self.extent_s:.3f} s, "
+                 f"{len(self.stages)} stages, "
+                 f"{self.rebuild_count} rebuilds "
+                 f"({1e3 * self.rebuild_stall_s:.2f} ms stalled), "
+                 f"{len(self.decisions)} governor decisions"]
+        lines.append(f"  {'stage':>12} {'reps':>4} {'frames':>7} "
+                     f"{'busy_s':>8} {'util':>6} {'imbal':>6} "
+                     f"{'q_wait_ms':>9}")
+        for s in self.stages:
+            lines.append(
+                f"  {s.name:>12} {s.replicas:>4} {s.frames:>7} "
+                f"{s.busy_s:>8.3f} {s.utilization:>6.1%} "
+                f"{s.imbalance:>6.2f} {1e3 * s.mean_queue_wait_s:>9.3f}")
+        for d in self.decisions:
+            lines.append(
+                f"  t={d['ts_s']:8.3f}s {d['trigger']:>11}"
+                + (f" cap={d['cap_w']:.2f} W" if "cap_w" in d else "")
+                + ("" if d.get("cap_met", True) else "  [CAP NOT MET]"))
+        lines.append(
+            f"  over-cap: {self.over_cap_windows} windows "
+            f"({self.over_cap_s:.2f} s), "
+            f"{self.over_cap_power_samples} measured samples above cap")
+        return "\n".join(lines)
+
+
+def _step_value_at(samples: list[tuple[float, float]], ts: float):
+    """Step-hold lookup in an ascending (ts, value) series."""
+    value = None
+    for t, v in samples:
+        if t <= ts:
+            value = v
+        else:
+            break
+    return value
+
+
+def analyze_trace(events: list[dict]) -> TraceReport:
+    """Compute a :class:`TraceReport` from loaded Chrome trace events."""
+    frame_spans = [e for e in events
+                   if e.get("ph") == "X" and e.get("cat") == "frame"]
+    window_spans = [e for e in events
+                    if e.get("ph") == "X" and e.get("cat") == "window"]
+    rebuilds = [e for e in events if e.get("ph") == "X"
+                and e.get("name") == "runtime/rebuild"]
+    decisions = sorted(
+        (e for e in events
+         if e.get("ph") == "i" and e.get("cat") == "governor"),
+        key=lambda e: e.get("ts", 0.0))
+
+    bounds = [(e["ts"], e["ts"] + e.get("dur", 0.0))
+              for e in frame_spans + window_spans]
+    extent_us = (max(b for _, b in bounds) - min(a for a, _ in bounds)) \
+        if bounds else 0.0
+    extent_s = extent_us / 1e6
+
+    # ------------------------------------------------------ per-stage rows
+    by_stage: dict[str, list[dict]] = {}
+    for e in frame_spans:
+        by_stage.setdefault(e["name"], []).append(e)
+    stages = []
+    for name in sorted(by_stage):
+        spans = by_stage[name]
+        per_tid: dict[int, int] = {}
+        for e in spans:
+            per_tid[e.get("tid", 0)] = per_tid.get(e.get("tid", 0), 0) + 1
+        replicas = len(per_tid)
+        frames = len(spans)
+        busy_s = sum(e.get("dur", 0.0) for e in spans) / 1e6
+        mean_frames = frames / replicas if replicas else 0.0
+        waits = [e["args"]["wait_s"] for e in spans
+                 if e.get("args") and "wait_s" in e["args"]]
+        stages.append(StageStats(
+            name=name,
+            replicas=replicas,
+            frames=frames,
+            busy_s=busy_s,
+            utilization=busy_s / (replicas * extent_s)
+            if replicas and extent_s > 0 else 0.0,
+            imbalance=max(per_tid.values()) / mean_frames
+            if mean_frames else 0.0,
+            mean_queue_wait_s=sum(waits) / len(waits) if waits else 0.0,
+        ))
+
+    # ------------------------------------------------- governor decisions
+    decision_rows = []
+    for e in decisions:
+        args = e.get("args") or {}
+        row = {"ts_s": e.get("ts", 0.0) / 1e6,
+               "trigger": args.get("trigger",
+                                   e.get("name", "").split("/")[-1])}
+        for key in ("cap_w", "cap_met", "period_us", "watts",
+                    "power_margin", "detail", "t_s"):
+            if key in args:
+                row[key] = args[key]
+        decision_rows.append(row)
+
+    # --------------------------------------------------- over-cap analysis
+    over = [e for e in window_spans
+            if (e.get("args") or {}).get("over_cap")]
+    over_cap_s = sum(e.get("dur", 0.0) for e in over) / 1e6
+
+    counters: dict[str, list[tuple[float, float]]] = {}
+    for e in events:
+        if e.get("ph") != "C":
+            continue
+        args = e.get("args") or {}
+        value = args.get("value")
+        if value is None:
+            continue
+        counters.setdefault(e["name"], []).append((e.get("ts", 0.0), value))
+    for series in counters.values():
+        series.sort(key=lambda s: s[0])
+    over_samples = 0
+    cap_series = counters.get("cap_w", [])
+    for ts, power in counters.get("power_w", []):
+        cap = _step_value_at(cap_series, ts)
+        if cap is not None and power > cap * (1 + 1e-9):
+            over_samples += 1
+
+    return TraceReport(
+        extent_s=extent_s,
+        stages=tuple(stages),
+        rebuild_count=len(rebuilds),
+        rebuild_stall_s=sum(e.get("dur", 0.0) for e in rebuilds) / 1e6,
+        decisions=tuple(decision_rows),
+        over_cap_windows=len(over),
+        over_cap_s=over_cap_s,
+        over_cap_power_samples=over_samples,
+    )

@@ -19,6 +19,30 @@ host-driven streaming system:
 Stage functions are arbitrary callables (jitted JAX fns or plain Python for
 synthetic chains), so the same runtime executes both the DVB-S2-style
 synthetic chains and per-layer LM stage functions.
+
+Observability — two complementary channels:
+
+  - ``on_event`` callback, stable payload schema: every event carries
+    ``t`` (monotonic ``time.perf_counter()`` seconds — the same clock
+    the runtime measures periods with) and ``plan_seq`` (an integer
+    plan-identity counter, 0 for the constructed stage set, incremented
+    by every ``rebuild``), so external consumers can order events and
+    correlate them with the plan that produced them. Events:
+    ``start {t, plan_seq, stages}``, ``stop {t, plan_seq}``,
+    ``rebuild {t, plan_seq, stages}`` (``plan_seq`` is the NEW plan's;
+    the ``start`` that follows a running rebuild carries the same one).
+  - an optional ``repro.obs.Tracer``: each worker thread becomes a
+    named ``{stage}/r{replica}`` trace row emitting one complete span
+    per frame (cat ``"frame"``, args ``seq``/``wait_s``) — reusing the
+    timestamps the busy-metering already takes, so an enabled tracer
+    adds only a ring-buffer append to the hot path — plus a
+    ``runtime/rebuild`` drain-gap span and queue-depth counters around
+    each swap. See docs/observability.md for the full catalog.
+
+``run()`` stats additionally report ``queue_wait_s``: per
+(stage, replica) time frames sat in that stage's input queue before
+being picked up — the backpressure signal that distinguishes a slow
+stage (high ``busy_s``) from a starved one downstream of a bottleneck.
 """
 from __future__ import annotations
 
@@ -73,18 +97,22 @@ def _call_builder(builder: Callable, st) -> Callable:
 
 class StreamingPipelineRuntime:
     def __init__(self, stages: Sequence[StageSpec], queue_depth: int = 8,
-                 on_event: Callable[[str, dict], None] | None = None):
+                 on_event: Callable[[str, dict], None] | None = None,
+                 tracer=None):
         self.stages = list(stages)
         self.queue_depth = queue_depth
         self.on_event = on_event
+        self.tracer = tracer         # repro.obs.Tracer or None
         self._queues: list[queue.Queue] = []
         self._threads: list[threading.Thread] = []
         self._out: list[tuple[int, Any]] = []
         self._out_lock = threading.Lock()
         self._replica_counts: dict[tuple[str, int], int] = {}
         self._busy_s: dict[tuple[str, int], float] = {}
+        self._queue_wait_s: dict[tuple[str, int], float] = {}
         self._started = False
         self._next_seq = 0           # survives rebuild(): global frame ids
+        self._plan_seq = 0           # plan identity; bumped per rebuild()
         self._alive: list[int] = []  # live workers per stage (stop protocol)
         self._alive_lock = threading.Lock()
         # from_plan wiring, so rebuild(plan) can re-materialize stages
@@ -93,7 +121,8 @@ class StreamingPipelineRuntime:
 
     def _emit(self, event: str, **payload):
         if self.on_event is not None:
-            self.on_event(event, payload)
+            self.on_event(event, {"t": time.perf_counter(),
+                                  "plan_seq": self._plan_seq, **payload})
 
     # ------------------------------------------------------------- workers
     def _worker(self, si: int, ri: int):
@@ -101,6 +130,10 @@ class StreamingPipelineRuntime:
         q_in = self._queues[si]
         q_out = self._queues[si + 1] if si + 1 < len(self._queues) else None
         delay = spec.delays[ri] if ri < len(spec.delays) else 0.0
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.set_thread_name(f"{spec.name}/r{ri}")
+        key = (spec.name, ri)
         while True:
             item = q_in.get()
             if isinstance(item, _Sentinel):
@@ -115,17 +148,27 @@ class StreamingPipelineRuntime:
                     # one: run()'s drain thread only expects frames)
                     q_out.put(item)
                 return
-            seq, payload = item
+            seq, payload, t_enq = item
             t_busy0 = time.perf_counter()
             if delay:
                 time.sleep(delay)  # injected stragglers count as busy time
             result = spec.fn(payload)
-            key = (spec.name, ri)
+            t_done = time.perf_counter()
             self._busy_s[key] = (self._busy_s.get(key, 0.0)
-                                 + time.perf_counter() - t_busy0)
+                                 + t_done - t_busy0)
+            # time the frame sat in this stage's input queue (enqueue to
+            # pickup) — backpressure, as opposed to busy time
+            self._queue_wait_s[key] = (self._queue_wait_s.get(key, 0.0)
+                                       + t_busy0 - t_enq)
             self._replica_counts[key] = self._replica_counts.get(key, 0) + 1
+            if tracer is not None and tracer.enabled:
+                # reuses the busy-metering timestamps: tracing-on cost on
+                # the hot path is one ring append per (frame, stage)
+                tracer.complete(spec.name, t_busy0, t_done - t_busy0,
+                                cat="frame",
+                                args={"seq": seq, "wait_s": t_busy0 - t_enq})
             if q_out is not None:
-                q_out.put((seq, result))
+                q_out.put((seq, result, t_done))
             else:
                 with self._out_lock:
                     self._out.append((seq, result))
@@ -164,6 +207,7 @@ class StreamingPipelineRuntime:
             self.start()
         busy0 = dict(self._busy_s)  # meter this run only, not prior runs
         counts0 = dict(self._replica_counts)
+        wait0 = dict(self._queue_wait_s)
         t0 = time.perf_counter()
         marks = {}
         sink = self._queues[-1]
@@ -184,7 +228,7 @@ class StreamingPipelineRuntime:
                 item = sink.get()
                 if isinstance(item, _Sentinel):
                     break  # timed out: give up on the stragglers
-                seq, result = item
+                seq, result = item[0], item[1]
                 if len(outs) == warmup:
                     marks["steady_start"] = time.perf_counter()
                 outs.append((seq, result))
@@ -196,7 +240,7 @@ class StreamingPipelineRuntime:
         seq0 = self._next_seq
         self._next_seq += expected
         for i, f in enumerate(frames):
-            self._queues[0].put((seq0 + i, f))
+            self._queues[0].put((seq0 + i, f, time.perf_counter()))
         if not done.wait(timeout_s):
             if not done.is_set():  # narrow the lost-race window: if the
                 # drain finished at the deadline, don't orphan a sentinel
@@ -208,6 +252,9 @@ class StreamingPipelineRuntime:
         total_s = marks["end"] - t0
         busy_s = {k: v - busy0.get(k, 0.0) for k, v in self._busy_s.items()
                   if v - busy0.get(k, 0.0) > 0.0}
+        queue_wait_s = {
+            k: v - wait0.get(k, 0.0) for k, v in self._queue_wait_s.items()
+            if v - wait0.get(k, 0.0) > 0.0}
         # frames each (stage, replica) processed during THIS run — the
         # per-window denominator the governor's per-stage drift
         # recalibration divides busy_s by ("replica_counts" stays the
@@ -225,6 +272,7 @@ class StreamingPipelineRuntime:
             "replica_counts": dict(self._replica_counts),
             "replica_frames": replica_frames,
             "busy_s": busy_s,
+            "queue_wait_s": queue_wait_s,
         }
         if any(s.busy_watts or s.idle_watts for s in self.stages):
             stats["energy_j"] = self.measured_energy_j(total_s, busy_s)
@@ -311,20 +359,38 @@ class StreamingPipelineRuntime:
             raise ValueError(
                 "rebuild() needs a stage_fn_builder (none captured; "
                 "construct via from_plan or pass one explicitly)")
+        tracer = self.tracer
+        tracing = tracer is not None and tracer.enabled
         was_started = self._started
+        t0 = time.perf_counter()
+        if tracing and was_started:
+            # frames queued at swap entry = the drain the stop will pay
+            tracer.counter("runtime/queue_depth",
+                           sum(q.qsize() for q in self._queues[:-1]), ts=t0)
         if was_started:
             self.stop()
         self._builder = builder
         self.stages = self._specs_from_plan(plan, builder, self._power)
+        self._plan_seq += 1
         self._emit("rebuild", stages=[s.name for s in self.stages])
         if was_started:
             self.start()
+        if tracing:
+            # the drain gap: stop-the-world from swap entry to restart
+            tracer.complete(
+                "runtime/rebuild", t0, time.perf_counter() - t0,
+                cat="control",
+                args={"plan_seq": self._plan_seq,
+                      "stages": [s.name for s in self.stages]})
+            if was_started:
+                tracer.counter("runtime/queue_depth", 0)
         return self
 
     @classmethod
     def from_plan(cls, plan, stage_fn_builder: Callable,
                   queue_depth: int = 8, power=None,
                   on_event: Callable[[str, dict], None] | None = None,
+                  tracer=None,
                   ) -> "StreamingPipelineRuntime":
         """Materialize stage workers from a PipelinePlan.
 
@@ -338,7 +404,7 @@ class StreamingPipelineRuntime:
         are captured so :meth:`rebuild` can re-materialize from a new
         plan."""
         rt = cls(cls._specs_from_plan(plan, stage_fn_builder, power),
-                 queue_depth=queue_depth, on_event=on_event)
+                 queue_depth=queue_depth, on_event=on_event, tracer=tracer)
         rt._builder = stage_fn_builder
         rt._power = power
         return rt

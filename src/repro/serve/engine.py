@@ -8,10 +8,21 @@ slots free up each step. Greedy sampling (the model's vocab-sharded argmax).
 This is the single-host engine; the pipelined heterogeneous variant runs
 the same engine behind repro.pipeline's streaming runtime (one engine per
 stage replica with sticky stream routing — see examples/serve_pipeline.py).
+
+Observability (both optional, duck-typed from ``repro.obs``): a
+``tracer`` records one ``serve/step`` span per engine step plus
+``serve/active_slots`` / ``serve/queue_depth`` counter tracks; a
+``metrics`` registry accumulates the serving-SLO quantities — the
+``serve/step_s`` latency histogram (p50/p95/p99 per window via
+``window_summary()``, the per-window p99 the ROADMAP's SLO-governed
+serving direction schedules against), ``serve/tokens`` and
+``serve/requests_done`` counters for joules/token attribution when the
+host is power-metered.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -33,11 +44,13 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, tracer=None, metrics=None):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
+        self.tracer = tracer
+        self.metrics = metrics
         self.cache = model.init_cache(batch_slots, max_len)
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * batch_slots
@@ -57,7 +70,9 @@ class ServeEngine:
 
     def step(self) -> None:
         """One engine step = one decode_step over the slot batch."""
+        t0 = time.perf_counter()
         self._admit()
+        active = sum(1 for s in self.slots if s is not None)
         tokens = np.zeros((self.B,), np.int32)
         for i, req in enumerate(self.slots):
             if req is None:
@@ -71,15 +86,32 @@ class ServeEngine:
         nxt, self.cache = self._step(self.params, self.cache,
                                      jnp.asarray(tokens))
         nxt = np.asarray(nxt)
+        emitted = completed = 0
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             if self._pending[i]:
                 continue  # still prefills; ignore logits
             req.out.append(int(nxt[i]))
+            emitted += 1
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
+                completed += 1
                 self.slots[i] = None
+        t1 = time.perf_counter()
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.complete("serve/step", t0, t1 - t0, cat="serve",
+                            args={"active": active, "tokens": emitted})
+            tracer.counter("serve/active_slots", active)
+            tracer.counter("serve/queue_depth", len(self.queue))
+        metrics = self.metrics
+        if metrics is not None:
+            metrics.observe("serve/step_s", t1 - t0)
+            if emitted:
+                metrics.inc("serve/tokens", emitted)
+            if completed:
+                metrics.inc("serve/requests_done", completed)
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:
         # NOTE: slots share one cache whose pos is global — the engine keeps

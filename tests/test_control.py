@@ -184,6 +184,54 @@ def test_metered_battery_reprojects_change_times_from_live_drain():
         assert tc > 3.0
 
 
+def _fresh_metered(smoothing=0.5):
+    return MeteredBatteryBudget(
+        capacity_j=1000.0, drain_w=20.0,
+        levels=((0.6, 30.0), (0.3, 20.0), (0.0, 8.0)),
+        smoothing=smoothing)
+
+
+def test_metered_battery_ewma_is_duration_weighted():
+    """A window's pull on the drain estimate scales with its duration:
+    a 100 ms glitch must not swing the projection as hard as a clean
+    1 s window at the same draw."""
+    short = _fresh_metered()
+    short.record(0.1, 5.0)
+    long = _fresh_metered()
+    long.record(1.0, 5.0)
+    move_short = 20.0 - short.drain_estimate_w
+    move_long = 20.0 - long.drain_estimate_w
+    # weights: 1 - 0.5**0.1 ~= 0.067 vs 0.5 — about 7.5x apart
+    assert move_short == pytest.approx((1.0 - 0.5 ** 0.1) * 15.0)
+    assert move_long == pytest.approx(0.5 * 15.0)
+    assert move_short < move_long / 5.0
+
+
+def test_metered_battery_ewma_windows_compose_by_duration():
+    """Two back-to-back windows at the same draw move the estimate
+    exactly as far as one window of their combined duration — the
+    property that makes the estimate independent of how the governor
+    happens to slice its control windows."""
+    split = _fresh_metered()
+    split.record(0.5, 5.0)
+    split.record(1.0, 5.0)
+    whole = _fresh_metered()
+    whole.record(1.0, 5.0)
+    assert split.drain_estimate_w == pytest.approx(whole.drain_estimate_w)
+    # and a 1 s window still carries exactly the `smoothing` weight,
+    # so fixed one-second control windows behave as before the weighting
+    assert whole.drain_estimate_w == pytest.approx(20.0 + 0.5 * (5.0 - 20.0))
+
+
+def test_metered_battery_ewma_zero_duration_is_inert():
+    """A zero-dt record must not move the estimate (weight 1-(1-s)^0=0)."""
+    mb = _fresh_metered()
+    mb.record(1.0, 5.0)
+    est = mb.drain_estimate_w
+    mb.record(1.0, 500.0)
+    assert mb.drain_estimate_w == pytest.approx(est)
+
+
 def _trace_instances():
     metered = MeteredBatteryBudget(
         capacity_j=100.0, drain_w=10.0,
@@ -1065,6 +1113,49 @@ def test_runtime_rebuild_preserves_sequence_ids():
     assert r1["seq_ids"] == list(range(12))
     assert r2["seq_ids"] == list(range(12, 24))  # counter survives rebuild
     assert "rebuild" in events and events.count("start") == 2
+
+
+def test_runtime_on_event_payload_schema():
+    """The documented stable on_event schema: every payload carries a
+    monotonic `t` and the active `plan_seq` (0 for the constructed plan,
+    +1 per rebuild, with "rebuild" reporting the new plan's seq), and
+    start/rebuild list the plan's (name, replicas) stages."""
+    from repro.core import herad
+
+    ch = small_chain()
+
+    class Plan:
+        chain = ch
+
+        def __init__(self, sol):
+            self.solution = sol
+
+    events = []
+    rt = StreamingPipelineRuntime.from_plan(
+        Plan(herad(ch, 3, 2)), lambda s, e: (lambda x: x),
+        on_event=lambda name, payload: events.append((name, payload)))
+    rt.start()
+    rt.run(list(range(4)))
+    rt.rebuild(Plan(herad(ch, 1, 1)))
+    rt.rebuild(Plan(herad(ch, 2, 1)))
+    rt.stop()
+
+    names = [n for n, _ in events]
+    # each running rebuild stops the old workers (emitting "stop" under
+    # the outgoing plan) before announcing the new plan and restarting
+    assert names == ["start", "stop", "rebuild", "start",
+                     "stop", "rebuild", "start", "stop"]
+    for _, payload in events:
+        assert isinstance(payload["t"], float)
+        assert isinstance(payload["plan_seq"], int)
+    ts = [p["t"] for _, p in events]
+    assert ts == sorted(ts)  # perf_counter stamps, monotonic
+    # rebuild reports the NEW plan's seq; the stop inside it the old one's
+    assert [p["plan_seq"] for _, p in events] == [0, 0, 1, 1, 1, 2, 2, 2]
+    for name, payload in events:
+        if name in ("start", "rebuild"):
+            stages = payload["stages"]
+            assert stages and all(isinstance(s, str) for s in stages)
 
 
 def test_runtime_rebuild_requires_builder():

@@ -127,3 +127,30 @@ def test_plan_runtime_integration_matches_predicted_period():
     rt.stop()
     measured_ms = res["period_s"] * 1e3
     assert measured_ms == pytest.approx(plan_period_ms, rel=0.5)
+
+
+def test_runtime_reports_queue_wait_for_bottleneck_stage():
+    """run() stats expose queue_wait_s per (stage, replica): frames pile
+    up in front of a slow middle stage, so its input wait dwarfs the
+    others', while the downstream stage (fed at the bottleneck's rate)
+    barely waits on frames at all relative to the bottleneck."""
+    stages = [
+        StageSpec("fast_in", lambda x: x),
+        StageSpec("slow_mid", lambda x: (time.sleep(0.004), x)[1]),
+        StageSpec("fast_out", lambda x: x),
+    ]
+    rt = StreamingPipelineRuntime(stages).start()
+    res = rt.run(list(range(40)), warmup=5)
+    rt.stop()
+
+    waits = res["queue_wait_s"]
+    busy = res["busy_s"]
+    assert set(waits) == set(busy)          # same (stage, replica) keys
+    assert all(w >= 0.0 for w in waits.values())
+    mid = waits[("slow_mid", 0)]
+    out = waits[("fast_out", 0)]
+    # the bottleneck's input queue saturates (bounded queue, frames wait
+    # up to maxsize * 4 ms each); downstream frames arrive paced at the
+    # bottleneck's period and are consumed immediately
+    assert mid > 10 * max(out, 1e-9)
+    assert mid > 0.05

@@ -50,3 +50,29 @@ def test_engine_batches_capacity():
         engine.submit(r)
     engine.run_until_idle()
     assert all(len(r.out) == 3 for r in reqs)
+
+
+def test_engine_emits_trace_and_metrics():
+    from repro.obs import MetricsRegistry, Tracer
+
+    cfg = get_smoke_config("gemma3-1b")
+    model = Model(cfg)
+    params = model.init(0)
+    tracer, metrics = Tracer(), MetricsRegistry()
+    engine = ServeEngine(model, params, batch_slots=2, max_len=64,
+                         tracer=tracer, metrics=metrics)
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_new_tokens=3)
+            for i in range(2)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_idle()
+
+    events = tracer.drain()
+    steps = [e for e in events if e.name == "serve/step"]
+    assert steps and all(e.ph == "X" and e.cat == "serve" for e in steps)
+    assert steps[0].args["active"] == 2
+    assert any(e.name == "serve/active_slots" for e in events)
+    assert metrics.counter("serve/tokens") == 6
+    assert metrics.counter("serve/requests_done") == 2
+    hist = metrics.snapshot()["histograms"]["serve/step_s"]
+    assert hist["count"] == len(steps) and hist["p99"] > 0

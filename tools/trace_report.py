@@ -1,0 +1,45 @@
+"""Summarize a Perfetto/Chrome trace.json written by repro.obs.
+
+Loads a trace (``repro.obs.export.write_perfetto`` output, or any Chrome
+trace-event JSON) and prints per-stage utilization, replica imbalance,
+rebuild stall time, governor decisions, and over-cap intervals — the
+numbers behind what the Perfetto UI shows visually.
+
+  PYTHONPATH=src python tools/trace_report.py trace.json
+  PYTHONPATH=src python tools/trace_report.py trace.json --json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import analyze_trace, load_trace  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", type=Path, help="trace.json path")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    events = load_trace(args.trace)
+    if not events:
+        print(f"{args.trace}: no trace events", file=sys.stderr)
+        return 1
+    report = analyze_trace(events)
+    if args.json:
+        print(json.dumps(dataclasses.asdict(report), indent=2))
+    else:
+        print(f"# {args.trace} ({len(events)} events)")
+        print(report.describe())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
