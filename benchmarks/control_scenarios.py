@@ -1,6 +1,6 @@
 """Closed-loop control scenarios as CSV — battery drain (open-loop and
-measurement-closed) and thermal throttle traces driven end to end through
-governor + streaming runtime.
+measurement-closed), thermal throttle, and SLO-governed serving traces
+driven end to end through governor + streaming runtime.
 
 For each scenario the harness prints one row per control window
 (measured vs predicted period and power, the cap and its within-window
@@ -34,16 +34,88 @@ from repro.configs.dvbs2 import (  # noqa: E402
     budget_presets,
     dvbs2_chain,
     platform_power,
+    serving_preset,
 )
-from repro.control import Governor, run_scenario  # noqa: E402
-from repro.obs import Tracer, write_perfetto  # noqa: E402
+from repro.control import (  # noqa: E402
+    Governor,
+    bursty_arrivals,
+    run_scenario,
+    run_serve_scenario,
+)
+from repro.obs import MetricsRegistry, Tracer, write_perfetto  # noqa: E402
 
 HORIZON_S = 9.0
-SCENARIOS = ["battery", "metered_battery", "thermal"]
+SCENARIOS = ["battery", "metered_battery", "thermal", "serve"]
+SERVE_TIME_SCALE = 2e-6
+SERVE_WINDOWS = 10
+
+
+def run_serve_one(platform: str, trace_dir: str | None = None) -> None:
+    """SLO-governed continuous-batching trace (docs/serving.md): the
+    serving engine on a bursty arrival trace, governed vs pinned at
+    max-performance — one CSV row per control window for each arm plus a
+    joules/token summary row."""
+    from repro.models.config import get_smoke_config
+    from repro.models.transformer import Model
+    from repro.serve import AdmissionPlanner, ServeEngine, SimClock
+
+    preset = serving_preset(platform)
+    cfg = get_smoke_config("gemma3-1b")
+    model = Model(cfg)
+    params = model.init(0)
+    arrivals = bursty_arrivals(SERVE_WINDOWS, base_rate=1, burst_rate=4,
+                               burst_windows=(3, 4), latency_slo_s=0.5)
+    print(f"# serve on {platform} (SLO "
+          f"{preset['slo_period'] * SERVE_TIME_SCALE * 1e3:.2f} ms/step, "
+          f"cap {preset['cap_w']:.2f} W, {len(arrivals)} arrivals)")
+    print("serve,platform,arm,window,t_s,cap_w,step_ms,pred_step_ms,"
+          "p99_ms,watts,steps,done,miss,rej,queue,trigger")
+    results = {}
+    for arm, governed in (("governed", True), ("max_perf", False)):
+        gov = Governor(preset["chain"], preset["b"], preset["l"],
+                       preset["power"], preset["budget"],
+                       slo_period=preset["slo_period"],
+                       upshift_margin=0.02)   # frontier energy gaps ~5%
+        planner = AdmissionPlanner(frontier=gov.frontier(),
+                                   time_scale=SERVE_TIME_SCALE,
+                                   cap_w=preset["cap_w"], safety=1.5)
+        tracer = Tracer() if trace_dir is not None and governed else None
+        engine = ServeEngine(model, params, batch_slots=4, max_len=64,
+                             clock=SimClock(), planner=planner,
+                             pace="fixed", tracer=tracer,
+                             metrics=MetricsRegistry())
+        res = run_serve_scenario(
+            gov, engine, arrivals, time_scale=SERVE_TIME_SCALE,
+            n_windows=SERVE_WINDOWS, window_dt=1.0,
+            inflation_at=((6, 1.3),), governed=governed,
+            tracer=tracer, metrics=engine.metrics)
+        results[arm] = res
+        if tracer is not None:
+            os.makedirs(trace_dir, exist_ok=True)
+            path = os.path.join(trace_dir, f"{platform}_serve.trace.json")
+            write_perfetto(tracer.drain(), path)
+            print(f"# trace written to {path}", file=sys.stderr)
+        for w in res.windows:
+            trigger = "/".join(e.trigger for e in w.events) or "-"
+            p99 = f"{w.p99_s * 1e3:.2f}" if w.p99_s == w.p99_s else "-"
+            print(f"serve,{platform},{arm},{w.index},{w.t:.1f},"
+                  f"{w.cap_w:.2f},{w.step_s * 1e3:.2f},"
+                  f"{w.predicted_step_s * 1e3:.2f},{p99},{w.watts:.2f},"
+                  f"{w.steps},{w.completed},{w.missed},{w.rejected},"
+                  f"{w.queue_depth},{trigger}")
+    print("serve_summary,platform,arm,replans,completed,rejected,misses,"
+          "tokens,joules_per_token")
+    for arm, res in results.items():
+        print(f"serve_summary,{platform},{arm},{len(res.replans)},"
+              f"{res.completed},{res.rejected},{res.deadline_misses},"
+              f"{res.tokens},{res.joules_per_token:.4f}")
 
 
 def run_one(platform: str, scenario: str, time_scale: float,
             lookahead_s: float, trace_dir: str | None = None) -> None:
+    if scenario == "serve":
+        run_serve_one(platform, trace_dir=trace_dir)
+        return
     chain = dvbs2_chain(platform)
     power = platform_power(platform)
     b, l = RESOURCES[platform]["half"]

@@ -6,7 +6,7 @@ root — the perf baseline CI guards against regressions (fail when the
 vectorized plan latency exceeds 2x the committed baseline, see
 ``--check``).
 
-Five measurement families:
+Six measurement families:
 
 - ``frontier``: ``pareto_frontier`` (nominal) and ``dvfs_frontier``
   (frequency-swept) end-to-end latency + frontier size, on the paper's
@@ -26,6 +26,14 @@ Five measurement families:
   (frame, stage). CI-gated (``--check``): enabled tracing must inflate
   the period < 5%, disabled < 3% (measured live, machine-independent —
   the observability layer must stay cheap enough to leave on).
+- ``serve``: the serving engine's admission machinery — the same request
+  trace served with continuous (mid-run) admission vs the legacy
+  step-0-only refill, on a stub model so the measurement is the engine
+  loop, not the network. CI-gated (``--check``) with within-run,
+  machine-independent invariants: continuous admission must not need
+  more engine steps than step0 for the same work (deterministic), and
+  its per-step admission overhead must not eat the batching win
+  (requests/s ratio >= 0.9 live).
 - ``speedup``: the headline — vectorized ``dvfs_frontier`` vs the pre-PR
   implementation (vendored below verbatim: per-profile unbatched
   ``herad_table`` fill, per-cell extraction + accounting sweep,
@@ -406,6 +414,62 @@ def run(smoke: bool) -> dict:
         "overhead_on_pct": 100.0 * (p_on - p_base) / p_base,
     })
 
+    # serving engine: continuous (mid-run) admission vs legacy step-0
+    # refill, same trace, stub model (the engine loop is the measurand).
+    # Steps are deterministic per arm; wall time is best-of-repeats on a
+    # reused engine so jit compilation stays off the timed path.
+    import jax.numpy as jnp
+    from repro.serve import Request, ServeEngine
+
+    class _StubServeModel:
+        def init_cache(self, b, max_len):
+            return {"pos": jnp.zeros((b,), jnp.int32)}
+
+        def decode_step(self, params, cache, tok):
+            return tok + 1, {"pos": cache["pos"] + 1}
+
+        def reset_cache_lane(self, cache, slot):
+            return {"pos": cache["pos"].at[slot].set(0)}
+
+    n_req, slots = (16, 4) if smoke else (48, 4)
+
+    def _serve_arm(admit_mode):
+        engine = ServeEngine(_StubServeModel(), None, batch_slots=slots,
+                             max_len=512, admit_mode=admit_mode)
+
+        def load():
+            rng = np.random.default_rng(11)
+            for i in range(n_req):
+                engine.submit(Request(
+                    rid=i, prompt=[1] * int(rng.integers(2, 5)),
+                    max_new_tokens=int(rng.integers(4, 17))))
+            steps = 0
+            while engine.queue or any(s is not None for s in engine.slots):
+                engine.step()
+                steps += 1
+            return steps
+
+        steps = load()                      # warm: compiles the stub step
+        best = math.inf
+        for _ in range(max(repeats, 3)):
+            t0 = time.perf_counter()
+            assert load() == steps          # same trace -> same step count
+            best = min(best, time.perf_counter() - t0)
+        return steps, best
+
+    cont_steps, cont_s = _serve_arm("continuous")
+    step0_steps, step0_s = _serve_arm("step0")
+    entries.append({
+        "bench": "serve", "mode": "admission-overhead", "chain": "stub-serve",
+        "platform": "default", "n": n_req, "b": slots, "l": 0,
+        "latency_ms": cont_s / cont_steps * 1e3,
+        "continuous_steps": cont_steps,
+        "step0_steps": step0_steps,
+        "continuous_req_per_s": n_req / cont_s,
+        "step0_req_per_s": n_req / step0_s,
+        "throughput_ratio": step0_s / cont_s,
+    })
+
     # headline speedup: n=16, b=l=8, 3-level ladder, vectorized vs pre-PR
     chain = make_chain(np.random.default_rng(7), 16, 0.6)
     power = _dvfs_model(DEFAULT_POWER)
@@ -473,6 +537,13 @@ def check(result: dict, baseline_path: Path, factor: float = 2.0) -> int:
     the tracer-overhead percentages are within-run ratios on one host, so
     they compare cleanly across machines — enabled tracing must inflate
     the steady-state period < 5%, a disabled tracer < 3%.
+
+    The ``serve`` entry is gated the same way (within-run, one host):
+    continuous admission must not take more engine steps than the
+    step-0-only refill for the same trace (mid-run refill keeps slots
+    busier — a deterministic count), and its requests/s must stay >= 0.9x
+    the step0 arm's (the per-step queue scan and lane resets must not eat
+    the batching win).
     """
     baseline = json.loads(baseline_path.read_text())
     base = {_key(e): e for e in baseline.get("entries", [])}
@@ -495,6 +566,19 @@ def check(result: dict, baseline_path: Path, factor: float = 2.0) -> int:
                     f"{e['overhead_off_pct']:.2f}% exceeds the 3% budget "
                     f"({e['period_base_ms']:.3f} -> "
                     f"{e['period_off_ms']:.3f} ms/frame)")
+            continue
+        if e["bench"] == "serve":
+            if e["continuous_steps"] > e["step0_steps"]:
+                failures.append(
+                    f"continuous admission took {e['continuous_steps']} "
+                    f"engine steps vs step0's {e['step0_steps']} — mid-run "
+                    f"refill must not add steps")
+            ratio = e["continuous_req_per_s"] / e["step0_req_per_s"]
+            if ratio < 0.9:
+                failures.append(
+                    f"continuous admission requests/s is {ratio:.2f}x the "
+                    f"step0 arm (< 0.9x): admission overhead ate the "
+                    f"batching win")
             continue
         ref = base.get(_key(e))
         if ref is None or ref["latency_ms"] < 1.0 or e["bench"] == "control":
@@ -538,6 +622,9 @@ def main(argv=None) -> int:
         if "overhead_on_pct" in e:
             extra = (f" on={e['overhead_on_pct']:+.2f}% "
                      f"off={e['overhead_off_pct']:+.2f}%")
+        if "throughput_ratio" in e:
+            extra = (f" steps={e['continuous_steps']}/{e['step0_steps']} "
+                     f"req/s ratio={e['continuous_req_per_s'] / e['step0_req_per_s']:.2f}x")
         print(f"{e['bench']:9s} {e['mode']:12s} {e['chain']:12s} "
               f"n={e['n']:3d} b={e['b']:2d} l={e['l']:2d} "
               f"{e['latency_ms']:9.3f} ms{extra}")

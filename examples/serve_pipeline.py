@@ -1,99 +1,171 @@
-"""Pipelined heterogeneous serving with the paper's scheduler.
+"""SLO-governed continuous-batching demo: a real serving engine on the
+DVB-S2 platform's energy frontier.
 
-Plans a reduced LM's block chain with HeRAD onto a simulated 2-big/2-little
-system, materializes real jitted stage functions from the plan, streams
-request microbatches through the StreamPU-style runtime, and then:
-  - injects a straggler replica (work stealing absorbs it);
-  - simulates losing a little device and re-plans (elastic scaling).
+A :class:`repro.serve.ServeEngine` (per-slot cache lanes, mid-run
+admission, per-request deadlines) serves a bursty arrival trace on a
+deterministic sim clock, paced by the :class:`repro.control.Governor`'s
+serving objective: each control window the governor observes the
+engine's windowed p99 step latency (``serve/step_s`` from the metrics
+registry) and re-plans off the (period, energy) Pareto frontier — the
+minimum-energy configuration meeting the SLO and every admitted
+deadline, max-performance when the cap makes that infeasible (EAPS).
+Admission itself queries the same frontier
+(:class:`repro.serve.AdmissionPlanner`): a request is only admitted when
+some configuration under the cap finishes it — and everything already
+running — before its deadline at the current pace, so no admitted
+request ever misses.
 
-Run:  PYTHONPATH=src python examples/serve_pipeline.py
+The run is compared against a max-performance arm (the governor pinned
+at the fastest frontier point): same trace, same zero misses, strictly
+more joules per token — the energy the serving objective banks.
+
+``--trace trace.json`` records the governed run through ``repro.obs``
+(engine step spans, governor decision instants, per-window serving
+counters) for ui.perfetto.dev / ``tools/trace_report.py``.
+
+  PYTHONPATH=src python examples/serve_pipeline.py
+  PYTHONPATH=src python examples/serve_pipeline.py --platform x7
+  PYTHONPATH=src python examples/serve_pipeline.py --trace trace.json
+  PYTHONPATH=src python examples/serve_pipeline.py --smoke   # CI: exit 1
+        # unless the governed run fires >= 1 "slo" re-plan, misses zero
+        # deadlines, and beats the max-perf arm on joules/token
 """
+import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.core import BIG, LITTLE, TaskChain, herad  # noqa: E402
-from repro.models import embedloss  # noqa: E402
+from repro.configs.dvbs2 import serving_preset  # noqa: E402
+from repro.control import (  # noqa: E402
+    Governor,
+    bursty_arrivals,
+    run_serve_scenario,
+)
 from repro.models.config import get_smoke_config  # noqa: E402
-from repro.models.layers import rms_norm, rope_table  # noqa: E402
 from repro.models.transformer import Model  # noqa: E402
-from repro.pipeline import StreamingPipelineRuntime  # noqa: E402
+from repro.obs import MetricsRegistry, Tracer, write_perfetto  # noqa: E402
+from repro.serve import AdmissionPlanner, ServeEngine, SimClock  # noqa: E402
 
-cfg = get_smoke_config("stablelm-3b")
-model = Model(cfg)
-params = model.init(0)
-L = cfg.n_layers
-
-names = ["embed"] + [f"layer{i}" for i in range(L)] + ["head"]
-w_big = [1.0] + [3.0] * L + [2.0]
-chain = TaskChain(w_big, [2 * w for w in w_big], [True] * len(names), names)
+TIME_SCALE = 2e-6     # engine seconds per chain µs
+N_WINDOWS = 10
+SAFETY = 1.5          # admission derate; > the injected 1.3x inflation
+INFLATION_AT = ((6, 1.3),)   # steps run 1.3x slower from window 6 on
 
 
-def stage_fn(s, e):
-    def run(x):
-        h = x
-        for t in range(s, e + 1):
-            if names[t] == "embed":
-                h = embedloss.embed_in(params["embed"], jnp.asarray(h),
-                                       jnp.float32)
-            elif names[t] == "head":
-                h = rms_norm(h, params["ln_final"], cfg.norm_eps)
-                h = np.asarray(embedloss.greedy(h[:, -1], params["embed"],
-                                                valid_vocab=cfg.vocab))
-            else:
-                i = int(names[t][5:])
-                p_i = jax.tree.map(lambda a: a[i], params["layers"])
-                sin, cos = rope_table(jnp.arange(h.shape[1]), cfg.hd,
-                                      cfg.rope_theta)
-                h, _ = model._attn_train(p_i, h, sin, cos, window=0)
-                h = model._ffn(p_i, h)
-        return h
-    return run
+def build(preset, model, params, *, tracer=None):
+    gov = Governor(preset["chain"], preset["b"], preset["l"],
+                   preset["power"], preset["budget"],
+                   slo_period=preset["slo_period"],
+                   upshift_margin=0.02,   # frontier energy gaps are ~5%
+                   tracer=tracer)
+    planner = AdmissionPlanner(frontier=gov.frontier(),
+                               time_scale=TIME_SCALE,
+                               cap_w=preset["cap_w"], safety=SAFETY)
+    engine = ServeEngine(model, params, batch_slots=4, max_len=64,
+                         clock=SimClock(), planner=planner, pace="fixed",
+                         tracer=tracer, metrics=MetricsRegistry())
+    return gov, engine
 
 
-def run_plan(b, l, label):
-    sol = herad(chain, b, l)
-    print(f"\n== {label}: b={b} little={l} -> "
-          f"{len(sol.stages)} stages, predicted period "
-          f"{sol.period(chain):.1f} (weight units)")
-    for st in sol.stages:
-        print(f"   tasks[{st.start}:{st.end}] x{st.cores} on "
-              f"{'big' if st.ctype == BIG else 'little'}")
-
-    class Plan:
-        solution = sol
-
-    Plan.chain = chain
-    rt = StreamingPipelineRuntime.from_plan(Plan, stage_fn).start()
-    rng = np.random.default_rng(0)
-    frames = [np.asarray(rng.integers(0, cfg.vocab, (1, 16)), np.int32)
-              for _ in range(24)]
-    t0 = time.time()
-    res = rt.run(frames, warmup=4)
-    rt.stop()
-    print(f"   measured period {res['period_s']*1e3:.1f} ms/frame, "
-          f"{res['throughput_fps']:.1f} frames/s "
-          f"(wall {time.time()-t0:.1f}s)")
-    return res["outputs"]
+def run_arm(preset, model, params, arrivals, *, governed: bool,
+            tracer=None):
+    gov, engine = build(preset, model, params, tracer=tracer)
+    return run_serve_scenario(
+        gov, engine, arrivals, time_scale=TIME_SCALE,
+        n_windows=N_WINDOWS, window_dt=1.0,
+        inflation_at=INFLATION_AT, governed=governed,
+        tracer=tracer, metrics=engine.metrics)
 
 
-out_a = run_plan(2, 2, "healthy system")
-# elastic scaling: one little chip lost
-out_b = run_plan(2, 1, "after losing one little chip (re-planned)")
+def _print_windows(res) -> None:
+    print(f"  {'win':>3} {'t':>5} {'cap_W':>7} {'step_ms':>8} "
+          f"{'p99_ms':>7} {'W':>6} {'steps':>5} {'done':>4} "
+          f"{'miss':>4} {'rej':>4} {'q':>3}  events")
+    for w in res.windows:
+        evs = ",".join(e.trigger for e in w.events) or "-"
+        p99 = f"{w.p99_s * 1e3:7.2f}" if w.p99_s == w.p99_s else "      -"
+        print(f"  {w.index:>3} {w.t:5.1f} {w.cap_w:7.2f} "
+              f"{w.step_s * 1e3:8.2f} {p99} {w.watts:6.2f} "
+              f"{w.steps:>5} {w.completed:>4} {w.missed:>4} "
+              f"{w.rejected:>4} {w.queue_depth:>3}  {evs}")
 
-ref = []
-for f in range(3):
-    rng = np.random.default_rng(0)
-    frames = [np.asarray(rng.integers(0, cfg.vocab, (1, 16)), np.int32)
-              for _ in range(24)]
-x = model.forward(params, {"tokens": jnp.asarray(frames[0])})
-ref0 = np.asarray(embedloss.greedy(x[:, -1], params["embed"],
-                                   valid_vocab=cfg.vocab))
-assert np.array_equal(out_a[0], ref0) and np.array_equal(out_b[0], ref0)
-print("\noutputs identical across plans and equal to monolithic forward ✓")
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--platform", default="mac", choices=["mac", "x7"])
+    ap.add_argument("--arch", default="gemma3-1b",
+                    help="smoke-config architecture to serve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: exit 1 on any acceptance violation")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto trace.json of the governed run")
+    args = ap.parse_args()
+
+    preset = serving_preset(args.platform)
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(0)
+    arrivals = bursty_arrivals(N_WINDOWS, base_rate=1, burst_rate=4,
+                               burst_windows=(3, 4), latency_slo_s=0.5)
+    print(f"platform {args.platform}: frontier of "
+          f"{len(preset['frontier'])} points, SLO "
+          f"{preset['slo_period'] * TIME_SCALE * 1e3:.2f} ms/step, "
+          f"cap {preset['cap_w']:.2f} W; {len(arrivals)} arrivals "
+          f"(bursts at windows 3-4, 1.3x slowdown from window 6)")
+
+    tracer = Tracer() if args.trace is not None else None
+    print("\n=== governed (SLO objective) ===")
+    gov_res = run_arm(preset, model, params, arrivals, governed=True,
+                      tracer=tracer)
+    if tracer is not None:
+        write_perfetto(tracer.drain(), args.trace)
+        print(f"  -> trace written to {args.trace} "
+              f"(load in ui.perfetto.dev or run tools/trace_report.py)")
+    print(gov_res.describe())
+    _print_windows(gov_res)
+
+    print("\n=== max-performance arm (EAPS fallback, pinned) ===")
+    max_res = run_arm(preset, model, params, arrivals, governed=False)
+    print(max_res.describe())
+    _print_windows(max_res)
+
+    saving = 1 - gov_res.joules_per_token / max_res.joules_per_token
+    print(f"\njoules/token: governed {gov_res.joules_per_token:.4g} vs "
+          f"max-perf {max_res.joules_per_token:.4g} "
+          f"({saving:.1%} saved); governed re-plans: "
+          f"{[e.trigger for e in gov_res.replans]}")
+
+    problems = []
+    slo_replans = [e for e in gov_res.replans if e.trigger == "slo"]
+    if not slo_replans:
+        problems.append("governed: no \"slo\" re-plan fired")
+    if gov_res.deadline_misses:
+        problems.append(f"governed: {gov_res.deadline_misses} deadline "
+                        f"misses (must be 0)")
+    if max_res.deadline_misses:
+        problems.append(f"max-perf: {max_res.deadline_misses} deadline "
+                        f"misses (must be 0)")
+    if gov_res.completed != len(arrivals):
+        problems.append(f"governed: {gov_res.completed}/{len(arrivals)} "
+                        f"requests completed")
+    if not gov_res.joules_per_token < max_res.joules_per_token:
+        problems.append(
+            f"governed joules/token {gov_res.joules_per_token:.4g} not "
+            f"below max-perf {max_res.joules_per_token:.4g}")
+    if args.smoke:
+        if problems:
+            print("\nSMOKE FAILURES:")
+            for pr in problems:
+                print(f"  - {pr}")
+            sys.exit(1)
+        print("\nsmoke OK: >= 1 slo re-plan, zero deadline misses, "
+              "energy saved vs max-perf")
+    elif problems:
+        print("\nWARNING:")
+        for pr in problems:
+            print(f"  - {pr}")
+
+
+if __name__ == "__main__":
+    main()

@@ -163,3 +163,41 @@ def budget_presets(platform: str, resources: str = "half",
             t_throttle=horizon_s / 3.0, t_recover=2.0 * horizon_s / 3.0),
         "_levels": (hi, mid, low),
     }
+
+
+def serving_preset(platform: str, resources: str = "half",
+                   slo_factor: float = 1.05) -> dict:
+    """SLO-governed serving scenario preset (docs/serving.md).
+
+    Sizes a per-step latency SLO off the platform's own frontier: the
+    target is a mid-frontier period (index ``len(front) // 3``) with
+    ``slo_factor`` headroom, so the *minimum-energy* point meeting the
+    SLO sits strictly below max-performance on the energy axis — the gap
+    the governed serving arm must bank versus the max-perf fallback —
+    and the constant cap clears the fastest point's draw by a few %, so
+    max-performance stays admissible as the EAPS fallback.
+
+    Returns ``{"chain", "power", "b", "l", "frontier", "slo_period",
+    "cap_w", "budget"}`` — everything a ``Governor(slo_period=...)``
+    plus an ``AdmissionPlanner`` over the same frontier needs.
+    """
+    from repro.control.budget import ConstantBudget
+    from repro.energy.pareto import pareto_frontier
+
+    chain = dvbs2_chain(platform)
+    power = platform_power(platform)
+    b, l = RESOURCES[platform][resources]
+    front = pareto_frontier(chain, b, l, power)
+    slo_period = front[min(len(front) - 1, len(front) // 3)].period \
+        * slo_factor
+    cap_w = front[0].energy / front[0].period * 1.05
+    return {
+        "chain": chain,
+        "power": power,
+        "b": b,
+        "l": l,
+        "frontier": front,
+        "slo_period": slo_period,
+        "cap_w": cap_w,
+        "budget": ConstantBudget(cap_w),
+    }

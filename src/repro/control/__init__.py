@@ -17,7 +17,9 @@ model; this subsystem keeps that choice honest online.
     schedule in via ``runtime.rebuild``;
   - :mod:`repro.control.sim`       — the scenario harness driving all of
     it end to end on a sleep-simulated runtime (examples, benchmarks and
-    acceptance tests share it).
+    acceptance tests share it), plus the serving scenarios: deterministic
+    arrival traces (bursty / diurnal) and ``run_serve_scenario``, the
+    SLO-governed continuous-batching loop (docs/serving.md).
 
 See docs/control.md for the governor state machine and trace formats.
 """
@@ -43,8 +45,14 @@ from .governor import (  # noqa: F401
     Observation,
 )
 from .sim import (  # noqa: F401
+    Arrival,
     ScenarioResult,
+    ServeScenarioResult,
+    ServeWindowRecord,
     WindowRecord,
+    bursty_arrivals,
+    diurnal_arrivals,
     run_scenario,
+    run_serve_scenario,
     sleep_stage_builder,
 )

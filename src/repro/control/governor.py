@@ -36,7 +36,23 @@ Triggers, in priority order at each :meth:`Governor.observe` tick:
      threshold crossing) is adopted one look-ahead early, trigger
      ``"predictive"``, so no control window ever straddles a transition
      over-cap.
-  4. **drift**: the measured period strayed from the active plan's
+  4. **slo** (serving objective, ``slo_period`` set): the governor
+     steers the serving engine's windowed p99 step latency
+     (``Observation.p99``, chain units) onto the SLO instead of chasing
+     raw throughput. On a breach (p99 over ``slo_period`` by more than
+     ``slo_tolerance``) it re-plans to the *minimum-energy* frontier
+     point whose predicted period — derated by the measured
+     p99/predicted pace ratio — meets the SLO and every admitted
+     deadline (``Observation.need_period``, the engine's tightest
+     per-step budget), falling back to **max-performance** when the cap
+     makes that infeasible (EAPS: bust the cap, not the deadlines;
+     flagged ``cap_met=False``). When the SLO holds with slack it
+     downshifts to the min-energy point that still meets it, but only
+     for an energy saving of at least ``upshift_margin`` (swap
+     hysteresis), and upshifts immediately when ``need_period``
+     tightens below the active plan (a queued tight-deadline request
+     must not starve behind an energy-frugal plan).
+  5. **drift**: the measured period strayed from the active plan's
      prediction by more than ``drift_tolerance`` (relative). The governor
      then *recalibrates*. When the observation carries per-stage measured
      busy times (``Observation.stage_busy``) and ``stage_recalibration``
@@ -86,6 +102,7 @@ from repro.energy.pareto import (
     CandidateTable,
     ParetoPoint,
     dvfs_frontier,
+    min_energy_meeting_deadline,
     min_period_under_power,
     pareto_frontier,
 )
@@ -114,7 +131,14 @@ class Observation:
     ``s{start}-{end}``) to measured per-frame busy time in the *chain's
     time unit* (the scenario harness aggregates the runtime's
     per-(stage, replica) ``busy_s`` / ``replica_frames`` stats and
-    divides out its wall-clock ``time_scale``)."""
+    divides out its wall-clock ``time_scale``).
+
+    Serving scenarios add ``p99`` — the windowed p99 step latency from
+    the metrics registry, converted to chain units — and
+    ``need_period``, the engine's tightest admissible per-step budget
+    over every admitted (and queued) deadline
+    (:meth:`repro.serve.engine.ServeEngine.min_step_need_s`, converted
+    likewise); both drive the ``"slo"`` trigger."""
 
     t: float
     period: float
@@ -122,6 +146,8 @@ class Observation:
     frames: int = 0
     dropped: int = 0
     stage_busy: Mapping[str, float] | None = None
+    p99: float | None = None
+    need_period: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,7 +186,8 @@ class GovernorEvent:
     """One governor decision: which trigger fired and what was adopted."""
 
     t: float
-    # "start" | "power" | "cap" | "predictive" | "drift" | "device_loss"
+    # "start" | "power" | "cap" | "predictive" | "slo" | "drift"
+    # | "device_loss"
     trigger: str
     cap_w: float                 # the planning cap the plan was picked under
     plan: ActivePlan
@@ -182,6 +209,11 @@ class Governor:
     drift rescale when observations carry ``stage_busy`` maps.
     ``dvfs=True`` plans off the frequency-swept frontier (per-stage DVFS
     levels, per-core-type ladders honored) instead of the nominal one.
+
+    ``slo_period`` (chain units) arms the serving objective: observations
+    carrying a ``p99`` are steered onto the SLO by the ``"slo"`` trigger
+    (see module docstring) with ``slo_tolerance`` relative breach
+    hysteresis.
     """
 
     def __init__(
@@ -200,6 +232,8 @@ class Governor:
         stage_recalibration: bool = True,
         dvfs: bool = False,
         freq_levels=None,
+        slo_period: float | None = None,
+        slo_tolerance: float = 0.1,
         tracer=None,
     ):
         if drift_tolerance <= 0:
@@ -210,6 +244,10 @@ class Governor:
             raise ValueError("power_tolerance must be non-negative")
         if lookahead_s < 0:
             raise ValueError("lookahead_s must be non-negative")
+        if slo_period is not None and slo_period <= 0:
+            raise ValueError("slo_period must be positive")
+        if slo_tolerance < 0:
+            raise ValueError("slo_tolerance must be non-negative")
         self.chain = chain
         self.b = b
         self.l = l
@@ -223,6 +261,8 @@ class Governor:
         self.stage_recalibration = stage_recalibration
         self.dvfs = dvfs
         self.freq_levels = freq_levels
+        self.slo_period = slo_period
+        self.slo_tolerance = slo_tolerance
         # optional repro.obs.Tracer: decision instants from every adopt,
         # cap_w / power_w / predicted_w / power_margin counter samples
         # from every metered observe tick (docs/observability.md)
@@ -391,6 +431,46 @@ class Governor:
                         detail=f"cap drops to {eff:.2f} W within "
                                f"{self.lookahead_s:g} s",
                         point=candidate)
+        elif self.slo_period is not None and obs.p99 is not None \
+                and not stale and obs.dropped == 0:
+            # serving objective: steer the measured p99 onto the SLO at
+            # minimum energy. The measured/predicted pace ratio plays the
+            # role of drift recalibration (the frontier query is derated
+            # by it instead of rescaling the chain), and the engine's
+            # need_period floors the target so an energy downshift never
+            # violates an admitted deadline.
+            ratio = max(obs.p99 / plan.predicted_period, 1e-9) \
+                if plan.predicted_period > 0 else 1.0
+            need = self.slo_period / ratio
+            if obs.need_period is not None:
+                need = min(need, obs.need_period)
+            candidate = min_energy_meeting_deadline(
+                self.chain, self.b, self.l, self.power,
+                eff / self.power_margin, need,
+                dvfs=self.dvfs, freq_levels=self.freq_levels,
+                frontier=self.frontier())
+            if obs.p99 > self.slo_period * (1 + self.slo_tolerance):
+                target = candidate if candidate is not None \
+                    else self.frontier()[0]
+                if target != plan.point:
+                    event = self._adopt(
+                        obs.t, "slo", eff,
+                        detail=f"p99 {obs.p99:.4g} over SLO "
+                               f"{self.slo_period:.4g}; need {need:.4g}",
+                        point=candidate, fallback="max_perf")
+            elif candidate is not None and candidate != plan.point and (
+                    plan.predicted_period > need * (1 + 1e-9)
+                    or candidate.energy
+                    < plan.point.energy * (1 - self.upshift_margin)):
+                # within SLO: upshift when deadline pressure tightened
+                # past the active plan, else downshift only for an energy
+                # saving worth the pipe drain
+                event = self._adopt(
+                    obs.t, "slo", eff,
+                    detail=f"within SLO; need {need:.4g}, energy "
+                           f"{candidate.energy:.4g} vs "
+                           f"{plan.point.energy:.4g}",
+                    point=candidate)
         elif not stale and obs.dropped == 0 and self._drifted(obs.period):
             # windows that lost frames to the liveness deadline measured
             # a stalled pipeline, and the first window after a swap mixes
@@ -520,19 +600,28 @@ class Governor:
             frontier=self.frontier())
 
     def _adopt(self, t: float, trigger: str, cap: float,
-               detail: str = "", point=_UNSELECTED) -> GovernorEvent:
+               detail: str = "", point=_UNSELECTED,
+               fallback: str = "min_power") -> GovernorEvent:
         """Adopt the fastest admissible point under ``cap``.
 
         ``point`` short-circuits the selection when the caller already
         ran it to decide whether to re-plan (pass the raw ``_select``
-        result — ``None`` still means "fall back to min power")."""
+        result — ``None`` still means "fall back"). Throughput triggers
+        fall back to the min-power point (shed speed, keep the chain
+        alive); the SLO trigger passes ``fallback="max_perf"`` (EAPS:
+        bust the cap rather than the deadlines)."""
         if point is _UNSELECTED:
             point = self._select(cap)
         cap_met = point is not None
         if point is None:
-            point = self.frontier()[-1]  # min-power fallback: shed speed
-            detail = (detail + "; " if detail else "") + \
-                "cap infeasible, fell back to min-power point"
+            if fallback == "max_perf":
+                point = self.frontier()[0]
+                detail = (detail + "; " if detail else "") + \
+                    "infeasible under cap, fell back to max-performance"
+            else:
+                point = self.frontier()[-1]  # min-power: shed speed
+                detail = (detail + "; " if detail else "") + \
+                    "cap infeasible, fell back to min-power point"
         old = self._plan
         self._plan = ActivePlan(self.chain, point)
         event = GovernorEvent(t, trigger, cap, self._plan, cap_met, detail)

@@ -45,6 +45,7 @@ from .pareto import (  # noqa: F401
     min_energy_under_period_freq,
     min_energy_under_period_freq_reference,
     min_energy_under_period_reference,
+    min_energy_meeting_deadline,
     min_period_under_power,
     pareto_frontier,
     sweep_budgets,

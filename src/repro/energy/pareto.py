@@ -1015,3 +1015,58 @@ def min_period_under_power(
         else:
             lo = mid + 1
     return frontier[lo] if lo < len(frontier) else None
+
+
+def min_energy_meeting_deadline(
+    chain: TaskChain, b: int, l: int, power: PowerModel, cap_w: float,
+    period_need: float,
+    dvfs: bool = False,
+    freq_levels=None,
+    frontier: list[ParetoPoint] | None = None,
+) -> ParetoPoint | None:
+    """Minimum-energy frontier point with period <= ``period_need`` under
+    ``cap_w`` — the deadline-safe serving query (EAPS shape).
+
+    The feasible set {period <= period_need} ∩ {watts <= cap_w} is a
+    contiguous frontier segment: periods ascend along the frontier while
+    energy and average watts strictly descend, so the cap admits a
+    suffix (found by the same bisection as :func:`min_period_under_power`)
+    and the deadline admits a prefix. The minimum-energy feasible point
+    is then the *slowest* point of the intersection — the last one whose
+    period still meets the deadline. Returns ``None`` when the segment is
+    empty (no configuration both meets the deadline and fits the cap);
+    callers fall back to max-performance, exactly the EAPS recipe: run
+    the cheapest feasible (freq, replicas), or flat-out when nothing is.
+
+    Admission epsilons match the governor's on both axes
+    (``cap + 1e-9`` watts, ``period_need * (1 + 1e-9)`` time units).
+    """
+    if frontier is None:
+        frontier = dvfs_frontier(chain, b, l, power, freq_levels) if dvfs \
+            else pareto_frontier(chain, b, l, power)
+    if not frontier:
+        return None
+
+    def admissible(pt: ParetoPoint) -> bool:
+        return pt.period > 0 and pt.energy / pt.period <= cap_w + 1e-9
+
+    lo, hi = 0, len(frontier)
+    while lo < hi:           # first index admitted by the cap
+        mid = (lo + hi) // 2
+        if admissible(frontier[mid]):
+            hi = mid
+        else:
+            lo = mid + 1
+    cap_lo = lo
+    limit = period_need * (1 + 1e-9)
+    lo, hi = 0, len(frontier)
+    while lo < hi:           # first index whose period exceeds the deadline
+        mid = (lo + hi) // 2
+        if frontier[mid].period <= limit:
+            lo = mid + 1
+        else:
+            hi = mid
+    deadline_hi = lo - 1     # last index meeting the deadline
+    if cap_lo > deadline_hi:
+        return None
+    return frontier[deadline_hi]

@@ -205,7 +205,9 @@ def context_attention(q, k, v, *, causal=True, window=0) -> jax.Array:
 def decode_attention_local(q, k_cache, v_cache, *, pos, window=0,
                            kv_offset=0) -> jax.Array:
     """Single-token attention over a cache: q (B, Hq, D), cache
-    (B, S, Hkv, D), ``pos`` = current absolute position (traced)."""
+    (B, S, Hkv, D), ``pos`` = current absolute position (traced) — a
+    scalar, or a (B,) vector of per-slot positions (continuous batching:
+    each lane masks against its own progress)."""
     b, hq, d = q.shape
     skv, n_kv = k_cache.shape[1], k_cache.shape[2]
     g = hq // n_kv
@@ -213,12 +215,13 @@ def decode_attention_local(q, k_cache, v_cache, *, pos, window=0,
     scale = 1.0 / math.sqrt(d)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32)) * scale
     kv_pos = kv_offset + jnp.arange(skv)
-    msk = kv_pos <= pos
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    msk = kv_pos[None, :] <= pos_b[:, None]                 # (B, Skv)
     if window > 0:
-        msk &= kv_pos > pos - window
-    s = jnp.where(msk[None, None, None], s, _NEG)
+        msk &= kv_pos[None, :] > pos_b[:, None] - window
+    s = jnp.where(msk[:, None, None, :], s, _NEG)
     m = s.max(axis=-1)
-    p = jnp.where(msk[None, None, None], jnp.exp(s - m[..., None]), 0.0)
+    p = jnp.where(msk[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
     l = p.sum(axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return (o / jnp.maximum(l, 1e-30)[..., None], m, l)
@@ -248,6 +251,8 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=0) -> jax.Array:
         axes = tuple(a for a in axes if a not in used) or axes
     qspec = P(bspec, None, None)
     cspec = P(bspec, axes if len(axes) > 1 else axes[0], None, None)
+    # per-slot pos vectors shard with the batch; scalar pos is replicated
+    pspec = P(bspec) if jnp.ndim(pos) else P()
 
     def f(qq, kk, vv, pp):
         idx = jnp.int32(0)
@@ -264,7 +269,7 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=0) -> jax.Array:
         den = jax.lax.psum(wl, axes)
         return num / jnp.maximum(den, 1e-30)[..., None]
 
-    o = shard_map(f, mesh=mesh, in_specs=(qspec, cspec, cspec, P()),
+    o = shard_map(f, mesh=mesh, in_specs=(qspec, cspec, cspec, pspec),
                       out_specs=qspec)(q, k_cache, v_cache, pos)
     return o.reshape(b, hq, d).astype(q.dtype)
 

@@ -502,7 +502,9 @@ class Model:
             else (lambda sh, dt=cdt: jnp.zeros(sh, dt))
         b = batch_size
         kvshape = lambda n, s: (n, b, s, c.n_kv_heads, c.hd)  # noqa: E731
-        cache: dict[str, Any] = {"pos": make((), jnp.int32)}
+        # per-slot positions: each batch lane advances independently, so a
+        # serving engine can admit a request mid-run by resetting one lane
+        cache: dict[str, Any] = {"pos": make((b,), jnp.int32)}
         if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
             cache["k"] = make(kvshape(c.n_layers, seq_len))
             cache["v"] = make(kvshape(c.n_layers, seq_len))
@@ -552,7 +554,7 @@ class Model:
     def cache_axes(self):
         """Logical axes for the cache pytree (kv seq axis sharded)."""
         c = self.cfg
-        ax: dict[str, Any] = {"pos": ()}
+        ax: dict[str, Any] = {"pos": ("batch",)}
         kv = (None, "batch", "kv_seq", None, None)
         if c.kind in ("dense", "moe", "vlm") and c.window <= 0:
             ax["k"] = kv
@@ -583,6 +585,27 @@ class Model:
             ax["v_cross"] = kv
         return ax
 
+    def reset_cache_lane(self, cache, slot):
+        """Zero one batch lane of a decode cache (``pos[slot] = 0`` and
+        every leaf's ``slot`` row along its batch axis).
+
+        The result is exactly what :meth:`init_cache` would have produced
+        for that lane, so a serving engine admitting a new request mid-run
+        resets only the freed slot while the other lanes keep decoding —
+        attention masks already hide entries past each lane's own ``pos``,
+        but SSM conv/state leaves carry history unconditionally, so the
+        wipe must be unconditional too. ``slot`` may be a traced int32
+        (the helper is jit-friendly; donate the cache for in-place
+        updates)."""
+        axes = self.cache_axes()
+        new = {}
+        for key, val in cache.items():
+            ax = axes.get(key)
+            bi = ax.index("batch") if ax and "batch" in ax else 0
+            idx = (slice(None),) * bi + (slot,)
+            new[key] = val.at[idx].set(jnp.zeros((), val.dtype))
+        return new
+
     def _attn_decode(self, p, x, cache_kv, pos, *, rolling=False, window=0,
                      prefix="", cross=False):
         """x (B, 1, D); cache_kv = (k, v) slices (B, S, Hkv, hd).
@@ -597,18 +620,21 @@ class Model:
         if not cross:
             k = (h @ p[prefix + "wk"]).reshape(b, 1, c.n_kv_heads, c.hd)
             v = (h @ p[prefix + "wv"]).reshape(b, 1, c.n_kv_heads, c.hd)
-            sin, cos = rope_table(pos[None], c.hd, c.rope_theta)
+            # pos is per-slot (B,): each lane rotates and writes at its own
+            # position, so mid-run admissions decode exactly as if solo
+            pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+            sin, cos = rope_table(pos_b[:, None], c.hd, c.rope_theta)
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
             if rolling:
-                slot = pos % k_cache.shape[1]
+                slot = pos_b % k_cache.shape[1]
             else:
-                slot = jnp.minimum(pos, k_cache.shape[1] - 1)
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                k_cache, k.astype(k_cache.dtype), slot, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                v_cache, v.astype(v_cache.dtype), slot, axis=1)
-            att_pos = pos
+                slot = jnp.minimum(pos_b, k_cache.shape[1] - 1)
+            k_cache = k_cache.at[jnp.arange(b), slot].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[jnp.arange(b), slot].set(
+                v[:, 0].astype(v_cache.dtype))
+            att_pos = pos_b
         else:
             att_pos = jnp.int32(k_cache.shape[1] - 1)  # attend to all enc kv
         o = decode_attention(q[:, 0], k_cache, v_cache, pos=att_pos,
@@ -733,7 +759,7 @@ class Model:
         b, s = tokens.shape
         x, col = self.forward(params, batch, collect=True)
         cache = self.init_cache(b, cache_len)
-        cache["pos"] = jnp.int32(s)
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
 
         def place_full(dst, src):
             # src (..., B, S, Hkv, hd) -> write into dst (..., B, Smax, ...)

@@ -1,27 +1,52 @@
-"""Batched serving engine: continuous-batching-lite over Model.decode_step.
+"""Continuous-batching serving engine over Model.decode_step.
 
-A fixed pool of B slots; waiting requests claim free slots, their prompts
-stream in token-by-token through the same decode_step (prefill-as-decode —
-exact for every architecture family including SSM state), and completed
-slots free up each step. Greedy sampling (the model's vocab-sharded argmax).
+A fixed pool of B slots sharing one batched decode cache whose ``pos``
+is per-slot (``models/transformer.py``): every lane tracks its own
+position, so a waiting request is admitted *mid-run* by resetting only
+the freed slot's cache lane (``Model.reset_cache_lane``) — the other
+lanes keep decoding, and the admitted request's tokens are byte-
+identical to serving it alone (``tests/test_serve.py`` sweeps admission
+offsets across the model families). Prompts stream in token-by-token
+through the same decode_step (prefill-as-decode — exact for every
+architecture family including SSM state); completed slots free up and
+re-admit from the arrival queue each step, so the queue drains
+continuously instead of only at full-batch boundaries. Greedy sampling
+(the model's vocab-sharded argmax).
 
-This is the single-host engine; the pipelined heterogeneous variant runs
-the same engine behind repro.pipeline's streaming runtime (one engine per
-stage replica with sticky stream routing — see examples/serve_pipeline.py).
+Deadline-safe admission (optional): give the engine an
+:class:`~repro.serve.slo.AdmissionPlanner` and per-request
+``deadline_s`` values, and each admission queries the (period, energy)
+frontier for the minimum-energy (freq, replicas) configuration whose
+step latency meets *every* admitted deadline under the current power
+cap — falling back to max-performance when infeasible, and rejecting a
+request outright when even max-perf would miss (EAPS; never admit into
+a guaranteed miss). The selected point lands on ``plan_point``; with
+``pace="planner"`` and a :class:`SimClock` the engine also paces its
+own deterministic step time from it, with ``pace="fixed"`` an outer
+loop (the governor scenario, ``repro.control.sim.run_serve_scenario``)
+owns ``step_time_s`` and admission additionally checks the *current*
+pace so a mid-window arrival can never be admitted into a miss.
+
+Clocks: by default the engine runs on the wall clock (deadlines in
+``time.perf_counter()`` seconds). Pass a :class:`SimClock` and every
+step advances it by ``step_time_s`` exactly — the deterministic sim
+clock the serving scenarios and SLO property tests run on.
 
 Observability (both optional, duck-typed from ``repro.obs``): a
 ``tracer`` records one ``serve/step`` span per engine step plus
 ``serve/active_slots`` / ``serve/queue_depth`` counter tracks; a
 ``metrics`` registry accumulates the serving-SLO quantities — the
 ``serve/step_s`` latency histogram (p50/p95/p99 per window via
-``window_summary()``, the per-window p99 the ROADMAP's SLO-governed
-serving direction schedules against), ``serve/tokens`` and
-``serve/requests_done`` counters for joules/token attribution when the
-host is power-metered.
+``window_summary()``, the p99 the SLO governor steers on),
+``serve/tokens`` and ``serve/requests_done`` counters for joules/token
+attribution, a ``serve/queue_depth`` gauge, and the
+``serve/deadline_miss`` / ``serve/rejected`` counters the scenario
+results reconcile against (``tests/test_obs.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Optional
@@ -32,42 +57,214 @@ import numpy as np
 
 from repro.models.transformer import Model
 
+from .slo import AdmissionPlanner, step_need_s
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
+    deadline_s: float | None = None    # absolute engine-clock deadline
+    arrival_s: float | None = None     # stamped by submit() if None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False             # dropped by admission control
+    missed: bool = False               # finished past its deadline
+    admitted_s: float | None = None
+    finished_s: float | None = None
+
+    @property
+    def total_steps(self) -> int:
+        """Engine steps from admission to completion: the prompt streams
+        through decode (len(prompt) steps, the last of which emits the
+        first output token) plus max_new_tokens - 1 further steps."""
+        return len(self.prompt) + self.max_new_tokens - 1
+
+
+class SimClock:
+    """Deterministic engine clock for scenario runs and property tests."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, batch_slots: int = 4,
-                 max_len: int = 256, tracer=None, metrics=None):
+                 max_len: int = 256, tracer=None, metrics=None,
+                 clock: SimClock | None = None,
+                 planner: AdmissionPlanner | None = None,
+                 admit_mode: str = "continuous",
+                 pace: str = "planner",
+                 step_time_s: float | None = None):
+        if admit_mode not in ("continuous", "step0"):
+            raise ValueError(f"unknown admit_mode {admit_mode!r}")
+        if pace not in ("planner", "fixed"):
+            raise ValueError(f"unknown pace {pace!r}")
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.tracer = tracer
         self.metrics = metrics
+        self.clock = clock
+        self.planner = planner
+        self.admit_mode = admit_mode
+        self.pace = pace
+        # sim-clock seconds per step; under pace="planner" it follows the
+        # admission plan, under pace="fixed" the outer loop sets it
+        self.step_time_s = step_time_s
+        self.last_step_s = 0.0
+        self.plan_point = None          # the planner's latest selection
+        self.plan_feasible = True       # False: running the EAPS fallback
         self.cache = model.init_cache(batch_slots, max_len)
         self.queue: deque[Request] = deque()
+        self.rejected: list[Request] = []
         self.slots: list[Optional[Request]] = [None] * batch_slots
         # per-slot progress: position within prompt (during forced prefill)
         self._pending: list[list[int]] = [[] for _ in range(batch_slots)]
         self._step = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._reset_lane = jax.jit(model.reset_cache_lane,
+                                   donate_argnums=(0,))
 
+    # ------------------------------------------------------------- clocking
+    def now(self) -> float:
+        return self.clock.now() if self.clock is not None \
+            else time.perf_counter()
+
+    def _planned_step_s(self) -> float:
+        if self.pace == "planner" and self.planner is not None \
+                and self.plan_point is not None:
+            return self.planner.step_s(self.plan_point)
+        if self.step_time_s is not None:
+            return self.step_time_s
+        return 0.0
+
+    # ------------------------------------------------------------ admission
     def submit(self, req: Request) -> None:
+        if req.arrival_s is None:
+            req.arrival_s = self.now()
         self.queue.append(req)
 
-    def _admit(self):
-        for i in range(self.B):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                self._pending[i] = list(req.prompt)
+    def _steps_remaining(self, i: int) -> int:
+        req = self.slots[i]
+        pend = len(self._pending[i])
+        emit_left = req.max_new_tokens - len(req.out)
+        # the step that consumes the last prompt token also emits
+        return pend + emit_left - (1 if pend else 0)
 
+    def _needs(self, now: float, extra: Request | None = None
+               ) -> list[float]:
+        """Per-step latency budgets (s) of every admitted deadline (plus
+        an unadmitted candidate), derated by the planner's safety."""
+        safety = self.planner.safety if self.planner is not None else 1.0
+        needs = []
+        for i, req in enumerate(self.slots):
+            if req is not None and req.deadline_s is not None:
+                needs.append(step_need_s(req.deadline_s, now,
+                                         self._steps_remaining(i), safety))
+        if extra is not None and extra.deadline_s is not None:
+            needs.append(step_need_s(extra.deadline_s, now,
+                                     extra.total_steps, safety))
+        return needs
+
+    def min_step_need_s(self, include_queued: bool = True) -> float:
+        """The tightest admissible step latency over every admitted (and
+        optionally queued) deadline — what the serving scenario feeds the
+        governor as ``Observation.need_period`` so an energy downshift
+        never violates a deadline it admitted."""
+        now = self.now()
+        needs = self._needs(now)
+        if include_queued:
+            safety = self.planner.safety if self.planner is not None else 1.0
+            for req in self.queue:
+                if req.deadline_s is not None:
+                    needs.append(step_need_s(req.deadline_s, now,
+                                             req.total_steps, safety))
+        return min(needs) if needs else math.inf
+
+    def _reject(self, req: Request) -> None:
+        req.rejected = True
+        req.done = True
+        self.rejected.append(req)
+        if self.metrics is not None:
+            self.metrics.inc("serve/rejected")
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant("serve/rejected", cat="serve",
+                                args={"rid": req.rid})
+
+    def _admissible(self, req: Request, now: float) -> bool:
+        """Deadline-safe admission check for one queued candidate."""
+        if self.planner is None or req.deadline_s is None:
+            return True
+        point, feasible = self.planner.plan_admission(
+            self._needs(now, extra=req))
+        if point is None:
+            return False
+        if self.pace == "fixed" and self.step_time_s is not None:
+            # an outer loop owns the pace until its next re-plan: only
+            # admit what the *current* step time also satisfies
+            safety = self.planner.safety
+            if step_need_s(req.deadline_s, now, req.total_steps,
+                           safety) < self.step_time_s * (1 - 1e-9):
+                return False
+        self.plan_point = point
+        self.plan_feasible = feasible
+        return True
+
+    def _expired(self, req: Request, now: float) -> bool:
+        """A queued request no serving configuration can *admit* anymore.
+
+        The exact mirror of the admission fallback (same safety derate,
+        same epsilon): not-expired implies a solo ``plan_admission`` for
+        this request returns at least the max-perf fallback, so a queued
+        request always either gets admitted or expires — never starves
+        in between."""
+        if req.deadline_s is None:
+            return False
+        if self.planner is not None:
+            best = self.planner.step_s(self.planner.max_perf())
+            need = step_need_s(req.deadline_s, now, req.total_steps,
+                               self.planner.safety)
+            return best > need * (1 + 1e-9)
+        best = self._planned_step_s()
+        return now + req.total_steps * best > req.deadline_s + 1e-12
+
+    def _admit(self) -> None:
+        if self.admit_mode == "step0" and \
+                any(s is not None for s in self.slots):
+            return          # legacy batch mode: refill only when drained
+        now = self.now()
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        # FIFO scan with skip: a head whose deadline needs a faster plan
+        # than the current mix allows must not starve later requests that
+        # fit — it stays queued until feasible or expired
+        kept: deque[Request] = deque()
+        while self.queue and free:
+            req = self.queue.popleft()
+            if self._expired(req, now):
+                self._reject(req)
+                continue
+            if not self._admissible(req, now):
+                kept.append(req)
+                continue
+            i = free.pop(0)
+            self.cache = self._reset_lane(self.cache, jnp.int32(i))
+            self.slots[i] = req
+            self._pending[i] = list(req.prompt)
+            req.admitted_s = now
+        kept.extend(self.queue)
+        self.queue = kept
+
+    # ----------------------------------------------------------------- step
     def step(self) -> None:
         """One engine step = one decode_step over the slot batch."""
         t0 = time.perf_counter()
@@ -86,7 +283,15 @@ class ServeEngine:
         nxt, self.cache = self._step(self.params, self.cache,
                                      jnp.asarray(tokens))
         nxt = np.asarray(nxt)
-        emitted = completed = 0
+        t1 = time.perf_counter()
+        if self.clock is not None:
+            dt = self._planned_step_s()
+            self.clock.advance(dt)
+        else:
+            dt = t1 - t0
+        self.last_step_s = dt
+        now = self.now()
+        emitted = completed = missed = 0
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -96,28 +301,46 @@ class ServeEngine:
             emitted += 1
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
+                req.finished_s = now
                 completed += 1
+                if req.deadline_s is not None and now > req.deadline_s \
+                        + 1e-12:
+                    req.missed = True
+                    missed += 1
                 self.slots[i] = None
-        t1 = time.perf_counter()
         tracer = self.tracer
         if tracer is not None and tracer.enabled:
             tracer.complete("serve/step", t0, t1 - t0, cat="serve",
                             args={"active": active, "tokens": emitted})
             tracer.counter("serve/active_slots", active)
             tracer.counter("serve/queue_depth", len(self.queue))
+            if missed:
+                tracer.instant("serve/deadline_miss", cat="serve",
+                               args={"count": missed})
         metrics = self.metrics
         if metrics is not None:
-            metrics.observe("serve/step_s", t1 - t0)
+            metrics.observe("serve/step_s", dt)
+            metrics.set_gauge("serve/queue_depth", float(len(self.queue)))
             if emitted:
                 metrics.inc("serve/tokens", emitted)
             if completed:
                 metrics.inc("serve/requests_done", completed)
+            if missed:
+                metrics.inc("serve/deadline_miss", missed)
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:
-        # NOTE: slots share one cache whose pos is global — the engine keeps
-        # per-slot alignment by only admitting at step boundaries; for the
-        # substrate tests all requests are admitted at step 0.
+        """Step until the queue and every slot are empty. Waiting requests
+        are admitted mid-run into freed slots (per-slot cache positions
+        make that exact; admission is no longer restricted to step 0)."""
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
-                return
+            if not any(s is not None for s in self.slots):
+                # nothing active: drop queued requests that already expired
+                # so an infeasible backlog terminates instead of spinning
+                now = self.now()
+                self.queue = deque(
+                    r for r in self.queue
+                    if not (self._expired(r, now) and
+                            (self._reject(r) or True)))
+                if not self.queue:
+                    return
             self.step()

@@ -112,7 +112,12 @@ def apply_updates(params, grads, opt_state, cfg: OptConfig):
         g = g.astype(jnp.float32) * clip
         if quantized:
             m_f = dequantize(m["q"], m["s"], p.shape[-1])
-            v_f = dequantize(v["q"], v["s"], p.shape[-1])
+            # v is stored in sqrt domain: entries span decades within a
+            # block and sit in the update's denominator, so linear int8
+            # rounds the small ones to zero and their updates blow up.
+            # Quantizing sqrt(v) makes the int8 error land linearly in
+            # the denominator instead.
+            v_f = jnp.square(dequantize(v["q"], v["s"], p.shape[-1]))
         else:
             m_f, v_f = m, v
         m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
@@ -122,7 +127,7 @@ def apply_updates(params, grads, opt_state, cfg: OptConfig):
         new_p = (p32 - lr * (u + cfg.weight_decay * p32)).astype(p.dtype)
         if quantized:
             mq, ms = quantize(m_f)
-            vq, vs = quantize(v_f)
+            vq, vs = quantize(jnp.sqrt(v_f))
             return new_p, {"q": mq, "s": ms}, {"q": vq, "s": vs}
         return new_p, m_f, v_f
 

@@ -58,7 +58,9 @@ def test_smoke_decode_step(arch):
     for _ in range(3):
         tok, cache = step(params, cache, tok)
     assert tok.shape == (2,)
-    assert int(cache["pos"]) == 3
+    # pos is per-slot: every lane advanced together here
+    assert cache["pos"].shape == (2,)
+    assert np.all(np.asarray(cache["pos"]) == 3)
     assert bool((tok >= 0).all()) and bool((tok < cfg.vocab).all())
 
 

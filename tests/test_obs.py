@@ -5,9 +5,17 @@ import math
 import threading
 import time
 
+import jax.numpy as jnp
 import pytest
 
-from repro.control import Governor, ScriptedBudget, run_scenario
+from repro.control import (
+    ConstantBudget,
+    Governor,
+    ScriptedBudget,
+    bursty_arrivals,
+    run_scenario,
+    run_serve_scenario,
+)
 from repro.energy import CoreTypePower, PowerModel, pareto_frontier
 from repro.obs import (
     MetricsRegistry,
@@ -290,3 +298,121 @@ def test_governed_scenario_trace_round_trip(tmp_path):
     assert metrics.counter("scenario/replans") == len(res.replans)
     hist = metrics.snapshot()["histograms"]["scenario/period_us"]
     assert hist["count"] == len(res.windows)
+
+
+# ====================================================== serving round trip
+class _StubModel:
+    """Duck-typed decode model: the serving obs round trip is about the
+    metric/trace plumbing, not the network."""
+
+    def init_cache(self, b, max_len):
+        return {"pos": jnp.zeros((b,), jnp.int32)}
+
+    def decode_step(self, params, cache, tok):
+        return tok + 1, {"pos": cache["pos"] + 1}
+
+    def reset_cache_lane(self, cache, slot):
+        return {"pos": cache["pos"].at[slot].set(0)}
+
+
+def test_serve_deadline_miss_counter():
+    """A request that finishes past its deadline must be flagged on the
+    request, counted in ``serve/deadline_miss``, and marked in the
+    trace — the reconciliation anchor for the zero-miss claims (which
+    assert this very counter stays 0)."""
+    from repro.serve import Request, ServeEngine, SimClock
+
+    tracer, metrics = Tracer(), MetricsRegistry()
+    # no planner: the only miss path left is a pace collapse after
+    # admission (the engine rejects guaranteed misses up front)
+    engine = ServeEngine(_StubModel(), None, batch_slots=2, max_len=16,
+                         clock=SimClock(), step_time_s=1.0,
+                         tracer=tracer, metrics=metrics)
+    late = Request(rid=0, prompt=[1], max_new_tokens=4, deadline_s=10.0)
+    ok = Request(rid=1, prompt=[1], max_new_tokens=4, deadline_s=1000.0)
+    engine.submit(late)
+    engine.submit(ok)
+    engine.step()                 # both admitted at the healthy pace...
+    engine.step_time_s = 5.0      # ...then every step runs 5x slower
+    engine.run_until_idle()
+    assert late.done and late.missed and not ok.missed
+    assert metrics.counter("serve/deadline_miss") == 1
+    assert metrics.counter("serve/requests_done") == 2
+    assert any(e.name == "serve/deadline_miss" for e in tracer.drain())
+
+
+def test_served_scenario_metrics_and_trace_round_trip(tmp_path):
+    """The SLO-governed serving scenario, end to end on the stub model:
+    the metrics registry's serving counters must reconcile with the
+    ServeScenarioResult, each window's recorded p99 must equal the
+    previous window's paced step time (the registry's window summary is
+    the governor's own input), and the exported trace must carry engine
+    step spans, serving windows, and the "slo" decision instant."""
+    from repro.core import make_chain
+    from repro.serve import AdmissionPlanner, ServeEngine, SimClock
+    import numpy as np
+
+    chain = make_chain(np.random.default_rng(5), 4, 0.5)
+    power = PowerModel("t", CoreTypePower(0.1, 0.9),
+                       CoreTypePower(0.03, 0.32))
+    front = pareto_frontier(chain, 3, 2, power)
+    if len(front) < 3:
+        pytest.skip("degenerate frontier")
+    watts = [pt.energy / pt.period for pt in front]
+    slo_period = front[len(front) // 3].period * 1.05
+    ts = 1e-4
+    gov = Governor(chain, 3, 2, power, ConstantBudget(watts[0] * 1.05),
+                   slo_period=slo_period, upshift_margin=0.02)
+    planner = AdmissionPlanner(frontier=gov.frontier(), time_scale=ts,
+                               cap_w=watts[0] * 1.05, safety=1.5)
+    tracer, metrics = Tracer(), MetricsRegistry()
+    engine = ServeEngine(_StubModel(), None, batch_slots=4, max_len=32,
+                         clock=SimClock(), planner=planner, pace="fixed",
+                         tracer=tracer, metrics=metrics)
+    arrivals = bursty_arrivals(8, window_dt=0.2, base_rate=1,
+                               burst_rate=3, burst_windows=(2, 3),
+                               latency_slo_s=0.5, max_new_tokens=6)
+    res = run_serve_scenario(gov, engine, arrivals, time_scale=ts,
+                             n_windows=8, window_dt=0.2,
+                             inflation_at=((5, 1.2),),
+                             tracer=tracer, metrics=metrics)
+
+    # counters reconcile with the scenario result (and zero misses hold)
+    assert res.deadline_misses == 0
+    assert metrics.counter("serve/deadline_miss") == res.deadline_misses
+    assert metrics.counter("serve/requests_done") == res.completed
+    assert metrics.counter("serve/rejected") == res.rejected
+    assert metrics.counter("serve/tokens") == res.tokens
+    assert res.completed + res.rejected == len(res.requests)
+    assert sum(w.completed for w in res.windows) <= res.completed
+    assert metrics.gauge("serve/queue_depth") is not None
+
+    # each window's p99 is the previous window's paced step time — the
+    # deterministic sim makes the histogram round trip exact
+    for prev, cur in zip(res.windows, res.windows[1:]):
+        if prev.steps:
+            assert cur.p99_s == pytest.approx(prev.step_s)
+    # the cumulative step histogram saw at least every in-window step
+    hist = metrics.snapshot()["histograms"]["serve/step_s"]
+    assert hist["count"] >= sum(w.steps for w in res.windows) > 0
+
+    # the governed run actually exercised the serving objective
+    assert any(e.trigger == "slo" for e in res.replans)
+
+    # trace round trip: step spans, serving windows, decision instants
+    path = write_perfetto(tracer.drain(), tmp_path / "serve.json")
+    events = load_trace(path)
+    steps = [e for e in events
+             if e.get("ph") == "X" and e["name"] == "serve/step"]
+    assert len(steps) == hist["count"]
+    wins = [e for e in events
+            if e.get("ph") == "X" and e["name"] == "serve/window"]
+    assert len(wins) == len(res.windows)
+    assert sum(w["args"]["steps"] for w in wins) \
+        == sum(w.steps for w in res.windows)
+    instants = [e for e in events if e.get("ph") == "i"
+                and e["name"] == "governor/slo"]
+    assert instants and all(d["args"]["trigger"] == "slo"
+                            for d in instants)
+    counters = {e["name"] for e in events if e.get("ph") == "C"}
+    assert {"serve/active_slots", "serve/queue_depth"} <= counters

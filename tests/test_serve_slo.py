@@ -1,0 +1,253 @@
+"""Deadline-safe admission against brute-force oracles, and the
+zero-miss property of the serving engine on the deterministic sim clock.
+
+The admission layer (``repro.serve.slo`` + ``repro.energy.pareto.
+min_energy_meeting_deadline``) claims: among the (freq, replicas)
+frontier, the minimum-energy configuration meeting every deadline under
+the cap — max-performance fallback when the cap makes that infeasible,
+reject when even max-perf misses. These properties certify the bisection
+against a linear brute-force scan on small grids (n <= 4 tasks, pools
+<= 2+2, <= 3 frequency levels), the fallback trichotomy, and that no
+request the engine admits ever finishes past its deadline when the
+clock is simulated (every step advances it by exactly the planned step
+time)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import make_chain
+from repro.energy import (
+    DEFAULT_POWER,
+    PowerModel,
+    dvfs_frontier,
+    min_energy_meeting_deadline,
+    pareto_frontier,
+)
+from repro.serve import AdmissionPlanner, Request, ServeEngine, SimClock
+
+LADDERS = [
+    (1.0,),
+    (0.6, 1.0),
+    (0.5, 0.75, 1.0),
+]
+
+
+def _frontier(seed, n, b, l, ladder):
+    chain = make_chain(np.random.default_rng(seed), n, 0.5)
+    power = PowerModel("slo", DEFAULT_POWER.big, DEFAULT_POWER.little,
+                       freq_levels=ladder)
+    front = dvfs_frontier(chain, b, l, power) if len(ladder) > 1 \
+        else pareto_frontier(chain, b, l, power)
+    return chain, power, front
+
+
+def _oracle(front, cap_w, need):
+    """Linear brute-force scan: min-energy point meeting the deadline
+    under the cap, with the implementation's admission epsilons."""
+    feas = [pt for pt in front
+            if pt.period > 0
+            and pt.energy / pt.period <= cap_w + 1e-9
+            and pt.period <= need * (1 + 1e-9)]
+    return min(feas, key=lambda pt: pt.energy) if feas else None
+
+
+# ----------------------------------------------------- oracle equivalence
+@settings(deadline=None, max_examples=80)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 4),
+    b=st.integers(0, 2),
+    l=st.integers(0, 2),
+    ladder=st.sampled_from(LADDERS),
+    cap_i=st.integers(0, 10),
+    cap_f=st.sampled_from([0.5, 0.999, 1.0, 1.001, 1.5]),
+    need_i=st.integers(0, 10),
+    need_f=st.sampled_from([0.5, 0.999, 1.0, 1.001, 2.0]),
+)
+def test_min_energy_meeting_deadline_matches_oracle(
+        seed, n, b, l, ladder, cap_i, cap_f, need_i, need_f):
+    if b + l == 0:
+        return
+    chain, power, front = _frontier(seed, n, b, l, ladder)
+    if not front:
+        return
+    watts = [pt.energy / pt.period for pt in front]
+    periods = [pt.period for pt in front]
+    cap = watts[cap_i % len(front)] * cap_f
+    need = periods[need_i % len(front)] * need_f
+    got = min_energy_meeting_deadline(chain, b, l, power, cap, need,
+                                      frontier=front)
+    want = _oracle(front, cap, need)
+    assert got is want
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 4),
+    b=st.integers(1, 2),
+    l=st.integers(0, 2),
+    ladder=st.sampled_from(LADDERS),
+    cap_i=st.integers(0, 10),
+    cap_f=st.sampled_from([0.5, 1.0, 1.5]),
+    need_i=st.integers(0, 10),
+    need_f=st.sampled_from([0.5, 1.0, 2.0, math.inf]),
+)
+def test_planner_select_matches_oracle(seed, n, b, l, ladder, cap_i,
+                                       cap_f, need_i, need_f):
+    chain, power, front = _frontier(seed, n, b, l, ladder)
+    if not front:
+        return
+    ts = 1e-4
+    watts = [pt.energy / pt.period for pt in front]
+    periods = [pt.period for pt in front]
+    cap = watts[cap_i % len(front)] * cap_f
+    need = periods[need_i % len(front)] * need_f
+    planner = AdmissionPlanner(frontier=front, time_scale=ts, cap_w=cap)
+    got = planner.select(need * ts if math.isfinite(need) else math.inf)
+    want = _oracle(front, cap, need) if math.isfinite(need) else (
+        min((pt for pt in front
+             if pt.energy / pt.period <= cap + 1e-9),
+            key=lambda pt: pt.energy, default=None))
+    assert got is want
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 4),
+    b=st.integers(1, 2),
+    l=st.integers(0, 2),
+    ladder=st.sampled_from(LADDERS),
+    cap_i=st.integers(0, 10),
+    cap_f=st.sampled_from([0.2, 0.5, 1.0, 1.5]),
+    need_i=st.integers(0, 10),
+    need_f=st.sampled_from([0.3, 0.5, 1.0, 2.0]),
+)
+def test_plan_admission_trichotomy(seed, n, b, l, ladder, cap_i, cap_f,
+                                   need_i, need_f):
+    """plan_admission is exactly: feasible min-energy point, else the
+    max-performance fallback when flat-out still meets the deadline
+    (EAPS busts the cap, not the deadline), else reject."""
+    chain, power, front = _frontier(seed, n, b, l, ladder)
+    if not front:
+        return
+    ts = 1e-4
+    watts = [pt.energy / pt.period for pt in front]
+    periods = [pt.period for pt in front]
+    cap = watts[cap_i % len(front)] * cap_f
+    need = periods[need_i % len(front)] * need_f
+    planner = AdmissionPlanner(frontier=front, time_scale=ts, cap_w=cap)
+    point, feasible = planner.plan_admission([need * ts])
+    want = _oracle(front, cap, need)
+    if want is not None:
+        assert feasible and point is want
+    elif front[0].period <= need * (1 + 1e-9):
+        assert not feasible and point is front[0]   # max-perf fallback
+    else:
+        assert not feasible and point is None       # guaranteed miss
+
+
+def test_infeasible_cap_falls_back_to_max_perf():
+    """A cap below every frontier point's draw never yields a feasible
+    selection — admission must come back with the fastest point and
+    feasible=False, for any deadline flat-out can still make."""
+    chain, power, front = _frontier(7, 4, 2, 2, LADDERS[2])
+    min_watts = min(pt.energy / pt.period for pt in front)
+    planner = AdmissionPlanner(frontier=front, time_scale=1e-4,
+                               cap_w=min_watts * 0.5)
+    assert planner.select(front[-1].period * 2e-4) is None
+    point, feasible = planner.plan_admission([front[0].period * 1e-4])
+    assert point is front[0] and not feasible
+    # ...and a deadline even max-perf misses is rejected outright
+    point, feasible = planner.plan_admission([front[0].period * 1e-4 / 2])
+    assert point is None and not feasible
+
+
+# -------------------------------------------- zero-miss on the sim clock
+class _TinyModel:
+    """Minimal duck-typed model: the engine only needs init_cache /
+    decode_step / reset_cache_lane, and the zero-miss property is about
+    the control logic, not the network."""
+
+    def init_cache(self, b, max_len):
+        return {"pos": jnp.zeros((b,), jnp.int32)}
+
+    def decode_step(self, params, cache, tok):
+        return tok + 1, {"pos": cache["pos"] + 1}
+
+    def reset_cache_lane(self, cache, slot):
+        return {"pos": cache["pos"].at[slot].set(0)}
+
+
+_TINY = _TinyModel()
+
+
+def _tiny_engine(planner, slots):
+    return ServeEngine(_TINY, None, batch_slots=slots, max_len=32,
+                       clock=SimClock(), planner=planner, pace="planner")
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    seed=st.integers(0, 10_000),
+    n_req=st.integers(1, 8),
+    slots=st.integers(1, 4),
+    slack=st.sampled_from([0.3, 1.0, 3.0, 30.0]),
+    safety=st.sampled_from([1.0, 1.5]),
+)
+def test_no_admitted_request_misses_deadline(seed, n_req, slots, slack,
+                                             safety):
+    """Every submitted request resolves — completed or rejected — and no
+    request the engine chose to admit finishes past its deadline. Tight
+    slacks force rejections; the property is that a miss never slips
+    through admission."""
+    rng = np.random.default_rng(seed)
+    chain = make_chain(rng, 4, 0.5)
+    front = pareto_frontier(chain, 2, 2, DEFAULT_POWER)
+    ts = 1e-4
+    cap = max(pt.energy / pt.period for pt in front) * 1.05
+    planner = AdmissionPlanner(frontier=front, time_scale=ts, cap_w=cap,
+                               safety=safety)
+    engine = _tiny_engine(planner, slots)
+    reqs = []
+    for i in range(n_req):
+        steps = int(rng.integers(2, 8))
+        # budget scaled off the fastest step so every slack regime is
+        # meaningful regardless of the random frontier
+        deadline = steps * front[0].period * ts * slack \
+            * float(rng.uniform(0.5, 2.0))
+        reqs.append(Request(rid=i, prompt=[1] * int(rng.integers(1, 3)),
+                            max_new_tokens=steps, deadline_s=deadline))
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_idle()
+    for r in reqs:
+        assert r.done
+        if not r.rejected:
+            assert not r.missed
+            assert r.finished_s <= r.deadline_s + 1e-9
+
+
+def test_admitted_then_paced_by_min_energy_point():
+    """With ample slack the engine paces itself at the *cheapest* point
+    under the cap, not the fastest — the energy half of the EAPS claim
+    at the engine level."""
+    chain = make_chain(np.random.default_rng(3), 4, 0.5)
+    front = pareto_frontier(chain, 2, 2, DEFAULT_POWER)
+    if len(front) < 2:
+        pytest.skip("degenerate frontier")
+    ts = 1e-4
+    cap = max(pt.energy / pt.period for pt in front) * 1.05
+    planner = AdmissionPlanner(frontier=front, time_scale=ts, cap_w=cap)
+    engine = _tiny_engine(planner, 2)
+    req = Request(rid=0, prompt=[1], max_new_tokens=4,
+                  deadline_s=4 * front[-1].period * ts * 100)
+    engine.submit(req)
+    engine.run_until_idle()
+    assert req.done and not req.missed
+    assert engine.plan_point is front[-1]       # min-energy, not fastest
+    assert engine.last_step_s == planner.step_s(front[-1])

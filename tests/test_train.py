@@ -57,12 +57,12 @@ def test_loss_decreases_adamw():
     assert losses[-1] < losses[0] - 0.4, losses
 
 
-@pytest.mark.xfail(
-    reason="pre-existing at seed (was masked by the hypothesis collection "
-           "error): int8 moments drift ~0.9 nats from fp32 after 25 smoke "
-           "steps, beyond the 0.25 tolerance — see ROADMAP open items",
-    strict=False)
 def test_loss_decreases_adamw8_and_matches_fp32():
+    """Once ~0.9 nats adrift after 25 smoke steps: the second moment was
+    int8-quantized linearly, so within-block entries spanning decades
+    rounded to zero and their updates blew up through the denominator.
+    Storing sqrt(v) (squared on dequantize) brings the trajectories
+    within ~3e-4 nats; the 0.25 bound leaves seed-to-seed headroom."""
     l32, _ = _train(opt_name="adamw", steps=25)
     l8, _ = _train(opt_name="adamw8", steps=25)
     assert l8[-1] < l8[0] - 0.4
