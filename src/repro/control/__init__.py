@@ -36,6 +36,8 @@ from .calibrate import (  # noqa: F401
     fit_power_model,
     fit_report,
     sample_from_run,
+    samples_from_capture,
+    stage_info_from_plan,
     synthesize_samples,
 )
 from .governor import (  # noqa: F401

@@ -20,10 +20,13 @@ Sources of samples:
   - :func:`sample_from_run` converts a ``StreamingPipelineRuntime.run()``
     stats dict (its per-replica ``busy_s`` map and measured ``energy_j``)
     into a :class:`TraceSample` — the "recorded trace" path;
+  - :func:`samples_from_capture` converts aligned measurement windows
+    from a **real power capture** (RAPL ``energy_uj`` logs or macOS
+    ``powermetrics``, parsed and aligned by :mod:`repro.obs.power` —
+    ``windows_from_schedule`` / ``capture_windows_from_trace``) — the
+    measured-hardware path the ROADMAP's loop-closure item asked for;
   - :func:`synthesize_samples` fabricates windows from a known model at
-    scripted utilizations (+ optional noise) — the round-trip test path,
-    and a stand-in for RAPL / powermetrics captures until real traces are
-    wired in.
+    scripted utilizations (+ optional noise) — the round-trip test path.
 """
 from __future__ import annotations
 
@@ -106,6 +109,47 @@ def sample_from_run(stages, stats: dict) -> TraceSample:
     return TraceSample(alloc, busy, stats["energy_j"])
 
 
+def samples_from_capture(windows: Iterable) -> list[TraceSample]:
+    """Convert aligned capture windows into :class:`TraceSample` rows.
+
+    ``windows`` are :class:`repro.obs.power.CaptureWindow` records (duck-
+    typed: anything with ``alloc_s`` / ``busy_s`` / ``energy_j``) as
+    produced by ``windows_from_schedule`` (scripted synthetic or
+    hardware captures) or ``capture_windows_from_trace`` (a real trace
+    aligned against a capture). Windows with no allocation at all (e.g.
+    a capture interval that overlapped no trace activity) carry no
+    information for the fit and are skipped.
+    """
+    out = []
+    for w in windows:
+        alloc = {v: s for v, s in w.alloc_s.items() if s > 0.0}
+        if not alloc:
+            continue
+        busy = {k: s for k, s in w.busy_s.items() if s > 0.0}
+        out.append(TraceSample(alloc, busy, max(float(w.energy_j), 0.0)))
+    return out
+
+
+def stage_info_from_plan(plan) -> dict[str, dict]:
+    """Describe a plan's stages for trace/capture alignment.
+
+    Returns ``{stage_name: {"ctype", "freq", "cores"}}`` keyed by the
+    runtime's stage naming (``s{start}-{end}``), the mapping
+    ``repro.obs.power.capture_windows_from_trace`` and
+    ``repro.obs.report.attribute_energy`` consume. ``plan`` is anything
+    with ``.stages`` of Stage/FreqStage records (a ``Solution`` /
+    ``FreqSolution``, or an ``ActivePlan``'s ``point.solution``).
+    """
+    return {
+        f"s{st.start}-{st.end}": {
+            "ctype": st.ctype,
+            "freq": float(getattr(st, "freq", 1.0)),
+            "cores": int(st.cores),
+        }
+        for st in plan.stages
+    }
+
+
 def synthesize_samples(
     power: PowerModel,
     utilizations: Sequence[tuple[float, float]],
@@ -156,21 +200,40 @@ def fit_power_model(
     samples: Iterable[TraceSample],
     name: str = "calibrated",
     freq_levels=None,
+    on_degenerate: str = "fallback",
 ) -> PowerModel:
     """Least-squares fit of (static, dynamic) watts per core type.
 
     Solves the linear system described in the module docstring with
     ``numpy.linalg.lstsq`` and clamps tiny negative estimates (noise can
-    push an unconstrained fit below zero) to 0. Needs windows that
-    actually vary utilization per core type — four identical rows are
-    rank-deficient; a degenerate system raises. ``freq_levels`` seeds the
-    fitted model's DVFS ladder (default: nominal-only)."""
+    push an unconstrained fit below zero) to 0. Identifying all four
+    coefficients needs windows that actually vary utilization *and*
+    allocation mix per core type; real captures are routinely degenerate
+    (duplicate utilizations, zero-busy idle windows, single-type chains).
+    ``on_degenerate`` controls what happens then:
+
+      - ``"fallback"`` (default): solve the rank-deficient system with a
+        singular-value-truncated minimum-norm least squares — the energy
+        totals are still matched exactly on the observed subspace, the
+        unidentifiable directions are pinned at the smallest-magnitude
+        (never noise-amplified) solution, and zero-information cases
+        (no windows, no allocation) still raise;
+      - ``"raise"``: the strict pre-capture behaviour — reject the
+        window set with ``ValueError`` so calibration scripts can demand
+        a schedule that identifies everything.
+
+    ``freq_levels`` seeds the fitted model's DVFS ladder (default:
+    nominal-only)."""
+    if on_degenerate not in ("fallback", "raise"):
+        raise ValueError("on_degenerate must be 'fallback' or 'raise'")
     rows, energies = [], []
     for s in samples:
         rows.append([s.alloc_s.get(BIG, 0.0), s.dyn_weight(BIG),
                      s.alloc_s.get(LITTLE, 0.0), s.dyn_weight(LITTLE)])
         energies.append(s.energy_j)
-    if len(rows) < 2:
+    if not rows:
+        raise ValueError("need at least one trace window to fit")
+    if len(rows) < 2 and on_degenerate == "raise":
         raise ValueError("need at least two trace windows to fit")
     a = np.asarray(rows, dtype=np.float64)
     y = np.asarray(energies, dtype=np.float64)
@@ -180,12 +243,15 @@ def fit_power_model(
     if len(active) == 0:
         raise ValueError("traces contain no allocation at all")
     rank = np.linalg.matrix_rank(a[:, active])
-    if rank < len(active):
+    if rank < len(active) and on_degenerate == "raise":
         raise ValueError(
             "trace windows are rank-deficient (vary the utilizations "
             "and/or window mix to identify all coefficients)")
+    # rcond truncates near-zero singular values: on a full-rank system
+    # this is plain OLS; on a degenerate one it yields the minimum-norm
+    # solution instead of blowing up along the unidentified directions
     coef = np.zeros(4)
-    coef[active], *_ = np.linalg.lstsq(a[:, active], y, rcond=None)
+    coef[active], *_ = np.linalg.lstsq(a[:, active], y, rcond=1e-9)
     coef = np.maximum(coef, 0.0)
     return PowerModel(
         name=name,

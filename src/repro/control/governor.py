@@ -23,10 +23,22 @@ Triggers, in priority order at each :meth:`Governor.observe` tick:
   2. **power**: the *measured* draw ``Observation.power_w`` exceeded the
      cap by more than ``power_tolerance`` (hysteresis against metering
      noise). The model said the plan fits; the meter disagrees — the
-     governor learns the measured/predicted draw ratio as a persistent
-     ``power_margin`` and re-selects the fastest point whose *derated*
-     prediction (``predicted_watts * power_margin``) fits, so the re-plan
-     converges in one step instead of thrashing.
+     governor learns persistent **per-core-type corrections**
+     (``Governor.corrections``, one multiplier per core type): every
+     trusted metered window is recorded as a (big-watts, little-watts,
+     measured-watts) row, and an overshoot re-fits the corrections by
+     least squares over that history. One window can only identify the
+     blend, so the first overshoot degenerates to the scalar ratchet
+     (both active types scaled by measured/predicted — the old
+     ``power_margin`` behaviour exactly); as soon as two rows with
+     distinct type mixes exist the fit splits the miscalibration per
+     type, so a meter that only under-reports BIG watts stops derating
+     LITTLE-heavy plans. Admission then prices each frontier point at
+     its *corrected* draw (``energy_report`` type split x corrections)
+     and re-selects the fastest point that fits — convergence in at most
+     two re-plans (one to learn the blend, one to split it).
+     ``power_margin`` survives as the read-only scalar summary
+     (``max(corrections)``).
   3. **cap** / **predictive**: the admissible cap dropped below the
      active plan's (margin-derated) predicted draw — or rose enough that
      a faster frontier point (by at least ``upshift_margin``) became
@@ -90,6 +102,7 @@ deterministically.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Mapping
 
@@ -97,6 +110,7 @@ import numpy as np
 
 from repro.core.chain import BIG, LITTLE, Solution, TaskChain
 from repro.core.dvfs import FreqSolution
+from repro.energy.account import energy_report
 from repro.energy.model import PowerModel
 from repro.energy.pareto import (
     CandidateTable,
@@ -271,14 +285,23 @@ class Governor:
         self.calibration_scale = 1.0   # cumulative drift recalibration
         # cumulative per-task drift rescale (vector recalibration trail)
         self.task_scales = np.ones(chain.n)
-        # learned measured/predicted draw ratio: selections are admitted
-        # at cap / power_margin so a model that under-reports watts is
-        # corrected once, by measurement, instead of re-tripping the cap.
-        # Ratcheted up on an overshoot; walked back toward the measured
-        # ratio by clean in-cap windows, so a transient spike does not
-        # derate the governor forever (the upshift hysteresis tracks the
-        # derated admission cap and restores speed as the margin decays)
-        self.power_margin = 1.0
+        # learned per-core-type measured/predicted correction factors:
+        # frontier points are admitted at their corrected draw
+        # (sum_v corrections[v] * predicted_type_watts[v]) so a model
+        # that under-reports one cluster's watts is corrected by
+        # measurement, per type, instead of derating everything.
+        # Ratcheted/fitted up on an overshoot from the recorded window
+        # history; walked back toward the measured ratio by clean in-cap
+        # windows, so a transient spike does not derate the governor
+        # forever (the upshift hysteresis tracks the derated admission
+        # cap and restores speed as the corrections decay)
+        self.corrections: dict[str, float] = {BIG: 1.0, LITTLE: 1.0}
+        # trusted metered windows as (big_w, little_w, measured_w) rows —
+        # the online least-squares system the overshoot re-fit solves
+        self._power_history: collections.deque = collections.deque(
+            maxlen=8)
+        # per-point type-split cache, invalidated with the frontier
+        self._split_cache: dict = {}
         self._frontier: list[ParetoPoint] | None = None
         # the (stage, type, level) candidate table shared across every
         # frontier rebuild: budgets are per-query, so device loss reuses
@@ -307,6 +330,15 @@ class Governor:
     def replans(self) -> list[GovernorEvent]:
         """Every adopted plan change after the initial one."""
         return [e for e in self.events if e.trigger != "start"]
+
+    @property
+    def power_margin(self) -> float:
+        """Scalar summary of the learned meter corrections: the worst
+        per-core-type factor. Read-only — the per-type ``corrections``
+        are the state; this is what the scalar-margin era exposed and
+        what conservative scalar derates (the slo branch, the upshift
+        hysteresis reference) still use."""
+        return max(self.corrections.values())
 
     def frontier(self) -> list[ParetoPoint]:
         """The cached (period, energy) frontier for the current pool and
@@ -368,37 +400,52 @@ class Governor:
                 tracer.counter("power_w", obs.power_w)
         stale = self._measurement_stale
         self._measurement_stale = False
-        # measured/predicted draw of a trustworthy window, if any
-        ratio_w = None
-        if not stale and obs.dropped == 0 and obs.power_w is not None \
-                and plan.predicted_watts > 0:
-            ratio_w = obs.power_w / plan.predicted_watts
-        overshoot = ratio_w is not None \
+        # a trustworthy metered window: record it for the correction fit
+        # and compare against the corrected (not raw) prediction
+        trusted = not stale and obs.dropped == 0 \
+            and obs.power_w is not None and plan.predicted_watts > 0
+        split = corrected = None
+        if trusted:
+            split = self._type_split_watts(plan.point)
+            corrected = self._corrected_watts(plan.point)
+            self._power_history.append(
+                (split[BIG], split[LITTLE], obs.power_w))
+        overshoot = trusted \
             and obs.power_w > cap * (1 + self.power_tolerance)
-        if ratio_w is not None and not overshoot \
-                and ratio_w < self.power_margin:
-            # a window consistent with the cap walks the learned margin
-            # back DOWN toward the measured ratio: a one-window transient
-            # spike must not derate every future plan forever. (Upward
-            # moves are the overshoot ratchet's job — nudging the margin
-            # up from sub-tolerance noise would sneak past the
-            # power_tolerance hysteresis via the cap branch.)
-            self.power_margin = max(
-                1.0, self.power_margin
-                + 0.5 * (ratio_w - self.power_margin))
+        if trusted and not overshoot and corrected > 0 \
+                and obs.power_w < corrected:
+            # a window consistent with the cap walks the learned
+            # corrections back DOWN toward the measured ratio: a
+            # one-window transient spike must not derate every future
+            # plan forever. EVERY type is relaxed by the blended
+            # measured/corrected ratio — the active plan may not
+            # exercise the type the spike derated (the fallback plan is
+            # often single-type), and the scalar-margin era decayed the
+            # whole derate on any clean window; per-type evidence is not
+            # lost, it lives in the window history the next overshoot
+            # re-fits from. With uniform corrections this is exactly the
+            # scalar decay, and an exact per-type fit (measured ==
+            # corrected) is a fixed point, so a fresh fit is never
+            # thrashed away. (Upward moves are the overshoot ratchet's
+            # job — nudging up from sub-tolerance noise would sneak past
+            # the power_tolerance hysteresis via the cap branch.)
+            s = obs.power_w / corrected
+            for v in self.corrections:
+                self.corrections[v] = max(
+                    1.0, self.corrections[v] * (1 + 0.5 * (s - 1)))
         event = None
-        if overshoot and plan.predicted_watts * self.power_margin \
-                <= cap * (1 + 1e-9):
+        if overshoot and corrected <= cap * (1 + 1e-9):
             # measured draw over a cap the model claims the plan fits:
             # the meter overrules the model. (When the model itself is
             # over — a cap drop — the cap branch below owns the event;
-            # learning a margin from that window would conflate a
+            # learning corrections from that window would conflate a
             # legitimate plan/cap mismatch with meter miscalibration.)
-            # Learn the measured/predicted ratio so the re-selection
-            # (and every later one) is derated by it — the re-plan
-            # converges in one step and metering noise below
-            # power_tolerance never thrashes.
-            self.power_margin = max(self.power_margin, ratio_w)
+            # Re-fit the per-type corrections from the window history so
+            # the re-selection (and every later one) prices each point
+            # at its corrected draw — the re-plan converges in at most
+            # two steps and metering noise below power_tolerance never
+            # thrashes.
+            self._fit_corrections(split, obs.power_w)
             candidate = self._select(eff)
             target = candidate if candidate is not None \
                 else self.frontier()[-1]
@@ -406,9 +453,11 @@ class Governor:
                 event = self._adopt(
                     obs.t, "power", eff,
                     detail=f"measured {obs.power_w:.2f} W over cap "
-                           f"{cap:.2f} W; margin {self.power_margin:.3f}",
+                           f"{cap:.2f} W; corrections "
+                           f"B={self.corrections[BIG]:.3f} "
+                           f"L={self.corrections[LITTLE]:.3f}",
                     point=candidate)
-        elif plan.predicted_watts * self.power_margin > eff * (1 + 1e-9):
+        elif self._corrected_watts(plan.point) > eff * (1 + 1e-9):
             # re-plan only if the selection actually changes: under a
             # persistently infeasible cap the min-power fallback IS the
             # active plan, and re-adopting it every tick would spam
@@ -417,8 +466,7 @@ class Governor:
             target = candidate if candidate is not None \
                 else self.frontier()[-1]
             if target != plan.point:
-                if plan.predicted_watts * self.power_margin \
-                        > cap * (1 + 1e-9):
+                if self._corrected_watts(plan.point) > cap * (1 + 1e-9):
                     event = self._adopt(
                         obs.t, "cap", eff,
                         detail=f"cap dropped to {cap:.2f} W",
@@ -502,6 +550,9 @@ class Governor:
         if tracer is not None and tracer.enabled:
             tracer.counter("predicted_w", self._plan.predicted_watts)
             tracer.counter("power_margin", self.power_margin)
+            tracer.counter("power_corrections",
+                           {BIG: self.corrections[BIG],
+                            LITTLE: self.corrections[LITTLE]})
         return event
 
     def device_loss(self, t: float, big: int = 0,
@@ -516,6 +567,7 @@ class Governor:
         self.b -= big
         self.l -= little
         self._frontier = None
+        self._split_cache = {}
         return self._adopt(
             t, "device_loss",
             self._planning_cap(t, self.budget.cap_at(t)),
@@ -558,6 +610,7 @@ class Governor:
         if self._candidates is not None:
             self._candidates = self._candidates.rescale(self.chain)
         self._frontier = None
+        self._split_cache = {}
 
     def _recalibrate(self, ratio: float):
         """Uniform-slowdown recalibration: every weight scaled alike."""
@@ -592,12 +645,90 @@ class Governor:
         return (f"per-stage recalibration over {len(hits)} stages; "
                 f"worst {worst[0]} x{worst[1]:.3f}")
 
+    def _type_split_watts(self, point: ParetoPoint) -> dict[str, float]:
+        """A frontier point's predicted draw split per core type, from
+        the same ``energy_report`` accounting that priced the point (so
+        the split sums to ``energy / period`` exactly)."""
+        hit = self._split_cache.get(point)
+        if hit is not None:
+            return hit
+        rep = energy_report(self.chain, point.solution, self.power,
+                            period=point.period)
+        split = {BIG: 0.0, LITTLE: 0.0}
+        for se in rep.stages:
+            split[se.stage.ctype] += se.total
+        split = {v: (e / point.period if point.period > 0 else 0.0)
+                 for v, e in split.items()}
+        self._split_cache[point] = split
+        return split
+
+    def _corrected_watts(self, point: ParetoPoint) -> float:
+        """The point's predicted draw derated by the learned per-type
+        corrections — what admission prices the point at."""
+        split = self._type_split_watts(point)
+        return sum(self.corrections[v] * w for v, w in split.items())
+
+    def _fit_corrections(self, split: dict[str, float], measured_w: float):
+        """Re-fit the per-type corrections from the recorded window
+        history (rows: big watts, little watts -> measured watts).
+
+        With two or more rows of distinct type mixes the least-squares
+        system identifies each type's factor exactly; a rank-deficient
+        history (one row, or one plan mix) degenerates to the scalar
+        ratchet over the current window — the old ``power_margin``
+        behaviour. Either way the current overshoot window ends up
+        satisfied (``corrected >= measured``), so the re-selection
+        cannot re-admit the plan that just tripped the cap."""
+        rows = np.asarray([[wb, wl] for wb, wl, _ in self._power_history],
+                          dtype=np.float64)
+        y = np.asarray([m for _, _, m in self._power_history],
+                       dtype=np.float64)
+        fitted = False
+        if len(rows) >= 2:
+            active = np.flatnonzero(np.abs(rows).sum(axis=0) > 0.0)
+            if len(active) > 0 and np.linalg.matrix_rank(
+                    rows[:, active]) == len(active):
+                coef = np.zeros(2)
+                coef[active], *_ = np.linalg.lstsq(
+                    rows[:, active], y, rcond=None)
+                for i, v in enumerate((BIG, LITTLE)):
+                    if i in active:
+                        self.corrections[v] = max(1.0, float(coef[i]))
+                fitted = True
+        if not fitted:
+            total = sum(split.values())
+            if total > 0:
+                ratio = measured_w / total
+                for v, w in split.items():
+                    if w > 0:
+                        self.corrections[v] = max(
+                            self.corrections[v], ratio)
+        # guarantee: the window that fired the trigger must be priced
+        # over its own measurement (a noisy fit could undershoot it)
+        corrected = sum(self.corrections[v] * w for v, w in split.items())
+        if 0 < corrected < measured_w:
+            scale = measured_w / corrected
+            for v, w in split.items():
+                if w > 0:
+                    self.corrections[v] *= scale
+
     def _select(self, cap: float) -> ParetoPoint | None:
-        return min_period_under_power(
-            self.chain, self.b, self.l, self.power,
-            cap / self.power_margin,
-            dvfs=self.dvfs, freq_levels=self.freq_levels,
-            frontier=self.frontier())
+        cb, cl = self.corrections[BIG], self.corrections[LITTLE]
+        if cb == cl:
+            # uniform corrections divide out of the admission test:
+            # delegate to the vectorized frontier query (bit-compatible
+            # with the scalar-margin era, including corrections == 1)
+            return min_period_under_power(
+                self.chain, self.b, self.l, self.power, cap / cb,
+                dvfs=self.dvfs, freq_levels=self.freq_levels,
+                frontier=self.frontier())
+        # per-type pricing: fastest frontier point whose corrected draw
+        # fits (the frontier is sorted fastest -> frugalest, same
+        # admission epsilon as min_period_under_power)
+        for pt in self.frontier():
+            if self._corrected_watts(pt) <= cap + 1e-9:
+                return pt
+        return None
 
     def _adopt(self, t: float, trigger: str, cap: float,
                detail: str = "", point=_UNSELECTED,

@@ -17,7 +17,13 @@ argument (duck-typed, optional, default off), so the layering in
     (thread-per-replica rows, counter tracks) + loader;
   - :mod:`repro.obs.report`  — trace analysis (per-stage utilization,
     replica imbalance, rebuild stall, over-cap intervals) behind the
-    ``tools/trace_report.py`` CLI.
+    ``tools/trace_report.py`` CLI, plus measured-energy attribution
+    (:func:`attribute_energy`) against a power capture;
+  - :mod:`repro.obs.power`   — measured-power ingestion: RAPL
+    ``energy_uj`` logs and macOS ``powermetrics`` captures parsed into
+    a normalized :class:`PowerCapture` timeline, synthetic capture
+    generators for CI, and trace/schedule alignment into
+    :class:`CaptureWindow` calibration rows.
 
 See docs/observability.md for the event/metric catalog and overhead
 numbers (``benchmarks/sched_perf.py`` gates the tracer at <5% period
@@ -25,5 +31,24 @@ inflation on the threaded runtime hot path).
 """
 from .export import load_trace, to_chrome_events, write_perfetto  # noqa: F401
 from .metrics import MetricsRegistry  # noqa: F401
-from .report import TraceReport, analyze_trace  # noqa: F401
+from .power import (  # noqa: F401
+    CaptureWindow,
+    PowerCapture,
+    PowerSample,
+    UtilizationWindow,
+    capture_windows_from_trace,
+    parse_powermetrics,
+    parse_rapl_log,
+    synthesize_powermetrics,
+    synthesize_rapl_log,
+    windows_from_schedule,
+)
+from .report import (  # noqa: F401
+    EnergyAttribution,
+    StageAttribution,
+    TraceReport,
+    WindowAttribution,
+    analyze_trace,
+    attribute_energy,
+)
 from .trace import NULL_TRACER, TraceEvent, Tracer  # noqa: F401

@@ -17,6 +17,14 @@ and normalized to the earliest event (Perfetto handles absolute values,
 but small numbers keep the JSON readable and diffable). The loader is
 the exporter's inverse as far as :mod:`repro.obs.report` needs — it
 returns the raw event dicts.
+
+Round-trip fidelity: mapping-valued counter samples survive
+``load_trace(write_perfetto(...))`` sample-for-sample (every series key,
+in order), numpy scalars are coerced to plain JSON numbers instead of
+crashing the writer, and tracer-level metadata that is not itself an
+event — today the ``dropped_records`` ring-overflow count — is embedded
+as a ``trace_metadata`` ``"M"`` record so it reloads with the events
+(:func:`repro.obs.report.analyze_trace` surfaces it).
 """
 from __future__ import annotations
 
@@ -27,6 +35,21 @@ from typing import Iterable, Mapping
 from .trace import TraceEvent
 
 PID = 1  # single-process traces; one pid keeps the Perfetto UI flat
+
+#: Name of the synthetic ``"M"`` record carrying trace-level metadata
+#: (``dropped_records`` etc.) through the file round trip.
+METADATA_EVENT = "trace_metadata"
+
+
+def _json_default(obj):
+    """Coerce non-JSON scalars (numpy floats/ints/bools) to plain Python
+    numbers; anything else still fails loudly."""
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return item()
+    raise TypeError(
+        f"trace event value of type {type(obj).__name__} is not "
+        f"JSON-serializable")
 
 
 def to_chrome_events(events: Iterable[TraceEvent],
@@ -67,14 +90,27 @@ def to_chrome_events(events: Iterable[TraceEvent],
 
 
 def write_perfetto(events: Iterable[TraceEvent], path,
-                   t0: float | None = None) -> Path:
-    """Write a Perfetto-loadable ``trace.json``; returns the path."""
+                   t0: float | None = None, *,
+                   dropped_records: int | None = None,
+                   metadata: Mapping | None = None) -> Path:
+    """Write a Perfetto-loadable ``trace.json``; returns the path.
+
+    ``dropped_records`` (typically ``tracer.dropped_records``) and any
+    extra ``metadata`` mapping are embedded as a :data:`METADATA_EVENT`
+    record so they survive the file round trip — ring overflow would
+    otherwise silently vanish between the tracer and the report.
+    """
+    chrome = to_chrome_events(events, t0=t0)
+    meta_args = dict(metadata or {})
+    if dropped_records is not None:
+        meta_args["dropped_records"] = int(dropped_records)
+    if meta_args:
+        chrome.append({"ph": "M", "name": METADATA_EVENT, "pid": PID,
+                       "tid": 0, "args": meta_args})
     path = Path(path)
-    payload = {
-        "traceEvents": to_chrome_events(events, t0=t0),
-        "displayTimeUnit": "ms",
-    }
-    path.write_text(json.dumps(payload) + "\n", encoding="utf-8")
+    payload = {"traceEvents": chrome, "displayTimeUnit": "ms"}
+    path.write_text(json.dumps(payload, default=_json_default) + "\n",
+                    encoding="utf-8")
     return path
 
 

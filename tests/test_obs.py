@@ -189,6 +189,47 @@ def test_chrome_export_format():
     assert inst["ts"] - span["ts"] == pytest.approx(1e6, rel=1e-6)
 
 
+def test_export_round_trip_mapping_counters_and_drop_metadata(tmp_path):
+    """Regression guard for export fidelity: multi-series counter samples
+    (numpy scalars included) and the tracer's ring-overflow count must
+    survive write_perfetto -> load_trace -> analyze_trace unchanged —
+    ring overflow would otherwise silently vanish between the tracer and
+    the report."""
+    import numpy as np
+
+    tr = Tracer(ring_size=8)
+    t = tr.now()
+    for i in range(12):  # overflow the 8-slot ring
+        tr.complete(f"f{i}", t + i * 0.1, 0.05, cat="frame")
+    tr.counter("power_corrections", {"B": np.float64(1.5), "L": 1.0},
+               ts=t + 2.0)
+    tr.counter("power_corrections", {"B": 1.25, "L": 1.0}, ts=t + 3.0)
+    tr.counter("cap_w", np.float32(18.0), ts=t + 2.0)
+    events = tr.drain()
+    assert tr.dropped_records > 0
+
+    path = write_perfetto(events, tmp_path / "t.json",
+                          dropped_records=tr.dropped_records,
+                          metadata={"run": "unit"})
+    loaded = load_trace(path)
+    # mapping counters keep one arg per sub-series key, numpy coerced
+    rows = [e for e in loaded if e.get("ph") == "C"
+            and e["name"] == "power_corrections"]
+    assert [r["args"] for r in rows] == [{"B": 1.5, "L": 1.0},
+                                         {"B": 1.25, "L": 1.0}]
+    (cap_row,) = [e for e in loaded if e.get("ph") == "C"
+                  and e["name"] == "cap_w"]
+    assert cap_row["args"] == {"value": 18.0}
+    # the overflow count and extra metadata ride a metadata record...
+    (meta,) = [e for e in loaded if e.get("ph") == "M"
+               and e.get("name") == "trace_metadata"]
+    assert meta["args"] == {"run": "unit",
+                            "dropped_records": tr.dropped_records}
+    # ...and land back on the report
+    report = analyze_trace(loaded)
+    assert report.dropped_records == tr.dropped_records
+
+
 def test_write_and_load_round_trip(tmp_path):
     tr = Tracer()
     tr.complete("x", tr.now(), 0.001, cat="frame")

@@ -1,0 +1,427 @@
+"""Power telemetry: golden capture fixtures parsed byte-exactly, the
+synthetic-capture round trip, capture/trace alignment, per-span energy
+attribution closure, and the trace_diff / trace_report CI gates."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.control import fit_power_model, samples_from_capture
+from repro.core import BIG, LITTLE
+from repro.energy import CoreTypePower, PowerModel
+from repro.obs import analyze_trace, attribute_energy
+from repro.obs.power import (
+    DEFAULT_RAPL_MAX_UJ,
+    PowerCapture,
+    PowerSample,
+    UtilizationWindow,
+    capture_windows_from_trace,
+    parse_powermetrics,
+    parse_rapl_log,
+    synthesize_powermetrics,
+    synthesize_rapl_log,
+    windows_from_schedule,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, ROOT / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# =========================================================== golden fixtures
+def test_rapl_golden_fixture_parses_exactly():
+    """The committed RAPL capture (counter wraps mid-log) must parse to
+    the exact per-interval joules written in the fixture header."""
+    cap = parse_rapl_log((FIXTURES / "rapl_wraparound.log").read_text())
+    assert set(cap.domains) == {"core", "package"}
+
+    pkg = cap.series("package")  # package-0 normalized to package
+    assert [(s.t0, s.t1) for s in pkg] == [(0.0, 0.5), (0.5, 1.0),
+                                           (1.0, 1.5)]
+    # every delta is 40000 µJ — including the one across the wraparound
+    # (990000 -> 30000 against max_energy_uj=1000000)
+    for s in pkg:
+        assert s.energy_j == pytest.approx(0.04, rel=1e-12)
+        assert s.watts == pytest.approx(0.08, rel=1e-12)
+    assert cap.total_energy("package") == pytest.approx(0.12, rel=1e-12)
+
+    core = cap.series("core")
+    assert len(core) == 3
+    for s in core:
+        assert s.energy_j == pytest.approx(500e-6, rel=1e-12)
+    # default-domain policy prefers the package rail, not a blind sum
+    assert cap.total_energy() == cap.total_energy("package")
+
+
+def test_rapl_wraparound_uses_declared_counter_range():
+    """The unwrap must add the fixture's declared max_energy_uj, not the
+    Intel default — drop the header and the wrapped delta explodes."""
+    text = (FIXTURES / "rapl_wraparound.log").read_text()
+    stripped = "\n".join(line for line in text.splitlines()
+                         if "max_energy_uj" not in line)
+    cap = parse_rapl_log(stripped)
+    wrapped = cap.series("package")[1]
+    assert wrapped.energy_j == pytest.approx(
+        (30000 - 990000 + DEFAULT_RAPL_MAX_UJ) * 1e-6, rel=1e-12)
+
+
+def test_powermetrics_golden_fixture_parses_exactly():
+    """The committed powermetrics capture: rail names map to normalized
+    domains, mW x elapsed-ms becomes joules exactly, and block 2's
+    missing CPU/GPU/Package rails leave gaps, not fabricated samples."""
+    cap = parse_powermetrics(
+        (FIXTURES / "powermetrics_missing.txt").read_text())
+    assert set(cap.domains) == {"big", "cpu", "gpu", "little", "package"}
+    assert cap.extent == (0.0, 1.5)
+
+    little = cap.series("little")
+    assert [s.energy_j for s in little] == pytest.approx(
+        [0.025, 0.020, 0.030], rel=1e-12)  # 50/40/60 mW x 0.5 s
+    big = cap.series("big")
+    assert [s.energy_j for s in big] == pytest.approx(
+        [0.600, 0.450, 0.750], rel=1e-12)  # 1200/900/1500 mW x 0.5 s
+
+    # rails missing from the middle block: two samples with a hole
+    for domain, joules in (("cpu", [0.625, 0.780]),
+                           ("package", [0.700, 0.850])):
+        series = cap.series(domain)
+        assert [(s.t0, s.t1) for s in series] == [(0.0, 0.5), (1.0, 1.5)]
+        assert [s.energy_j for s in series] == pytest.approx(
+            joules, rel=1e-12)
+    # pro-rata integration over the hole sees only the sampled halves
+    assert cap.energy_between(0.0, 1.5, "package") == pytest.approx(1.55)
+    assert cap.energy_between(0.5, 1.0, "package") == 0.0
+
+
+# ====================================================== capture semantics
+def test_capture_default_domain_resolution_order():
+    def s(d, e=1.0):
+        return PowerSample(0.0, 1.0, e, d)
+
+    assert PowerCapture([s("package", 2.0), s("big"), s("little")]) \
+        .total_energy() == 2.0
+    assert PowerCapture([s("cpu", 3.0), s("big"), s("little")]) \
+        .total_energy() == 3.0
+    assert PowerCapture([s("big", 2.0), s("little", 0.5)]) \
+        .total_energy() == 2.5
+    assert PowerCapture([s("dram", 4.0)]).total_energy() == 4.0
+    with pytest.raises(ValueError, match="ambiguous"):
+        PowerCapture([s("dram"), s("gpu")]).total_energy()
+    with pytest.raises(KeyError):
+        PowerCapture([s("package")]).total_energy("gpu")
+
+
+def test_capture_energy_between_pro_rata_and_rebase():
+    cap = PowerCapture([PowerSample(10.0, 11.0, 1.0),
+                        PowerSample(11.0, 12.0, 3.0)])
+    assert cap.energy_between(10.25, 10.75) == pytest.approx(0.5)
+    assert cap.energy_between(10.5, 11.5) == pytest.approx(0.5 + 1.5)
+    assert cap.energy_between(12.0, 13.0) == 0.0
+    based = cap.rebase()
+    assert based.extent == (0.0, 2.0)
+    assert based.total_energy() == cap.total_energy()
+    assert based.energy_between(0.5, 1.5) == pytest.approx(2.0)
+
+
+def test_capture_rejects_overlapping_samples():
+    with pytest.raises(ValueError, match="overlapping"):
+        PowerCapture([PowerSample(0.0, 1.0, 1.0),
+                      PowerSample(0.5, 1.5, 1.0)])
+
+
+def test_rapl_parser_rejects_non_increasing_timestamps():
+    with pytest.raises(ValueError, match="non-increasing"):
+        parse_rapl_log("0.0 package 100\n0.0 package 200\n")
+
+
+# ============================================ synthesize -> parse -> refit
+POWER = PowerModel("unit", CoreTypePower(0.35, 4.25),
+                   CoreTypePower(0.06, 0.84))
+SCHEDULE = [
+    UtilizationWindow(1.0, u_big=0.8, u_little=0.1, n_big=4, n_little=2),
+    UtilizationWindow(1.0, u_big=0.1, u_little=0.8, n_big=2, n_little=4),
+    UtilizationWindow(1.0, u_big=0.5, u_little=0.5, n_big=3, n_little=3),
+    UtilizationWindow(1.0, u_big=0.9, u_little=0.0, n_big=4, n_little=1),
+    UtilizationWindow(1.0, u_big=0.0, u_little=0.9, n_big=1, n_little=4),
+]
+
+
+def test_rapl_synthesis_round_trip_is_exact_across_wraparound():
+    truth_j = sum(w.watts(POWER) * w.dt_s for w in SCHEDULE)
+    for start in (0, DEFAULT_RAPL_MAX_UJ - 1_000):  # forces a wrap
+        cap = parse_rapl_log(synthesize_rapl_log(
+            POWER, SCHEDULE, sample_dt=0.2, start_uj=start))
+        assert cap.total_energy() == pytest.approx(truth_j, rel=1e-9)
+        assert cap.extent == (0.0, pytest.approx(5.0))
+
+
+def test_powermetrics_synthesis_dropped_rails_leave_gaps():
+    full = parse_powermetrics(synthesize_powermetrics(
+        POWER, SCHEDULE, sample_dt=1.0))
+    holey = parse_powermetrics(synthesize_powermetrics(
+        POWER, SCHEDULE, sample_dt=1.0,
+        drop_fields={2: ["Package"], 4: ["Package"]}))
+    assert len(holey.series("package")) == len(full.series("package")) - 2
+    assert holey.total_energy("package") \
+        < full.total_energy("package") - 1e-9
+    # the cluster rails still cover the full extent
+    assert full.total_energy("big") + full.total_energy("little") \
+        == pytest.approx(holey.total_energy("big")
+                         + holey.total_energy("little"))
+
+
+def test_ingestion_refit_recovers_per_type_watts_within_5pct():
+    """ISSUE acceptance: synthetic capture -> windows -> TraceSamples ->
+    fit_power_model wins back every per-core-type coefficient."""
+    cap = parse_rapl_log(synthesize_rapl_log(POWER, SCHEDULE,
+                                             sample_dt=0.25))
+    samples = samples_from_capture(windows_from_schedule(SCHEDULE, cap))
+    fitted = fit_power_model(samples, name="refit")
+    for v in (BIG, LITTLE):
+        assert fitted.busy_watts(v) == pytest.approx(
+            POWER.busy_watts(v), rel=0.05)
+        assert fitted.idle_watts(v) == pytest.approx(
+            POWER.idle_watts(v), rel=0.05)
+
+
+# ================================================== trace/capture alignment
+STAGE_INFO = {
+    "alpha": {"ctype": BIG, "freq": 1.0, "cores": 2},
+    "beta": {"ctype": LITTLE, "freq": 1.0, "cores": 1},
+}
+
+
+def _span(name, cat, ts_us, dur_us, tid=1, args=None):
+    e = {"ph": "X", "cat": cat, "name": name, "pid": 1, "tid": tid,
+         "ts": ts_us, "dur": dur_us}
+    if args:
+        e["args"] = args
+    return e
+
+
+def test_capture_windows_from_trace_aligns_and_clamps():
+    events = [
+        _span("w", "window", 0.0, 1e6, args={"index": 0}),
+        _span("alpha", "frame", 0.0, 0.4e6, tid=1),
+        _span("alpha", "frame", 0.0, 0.4e6, tid=2),
+        # beta overlaps the window for only half its span
+        _span("beta", "frame", 0.8e6, 0.4e6, tid=3),
+        _span("ignored", "frame", 0.0, 1e6, tid=4),  # not in stage_info
+    ]
+    cap = PowerCapture([PowerSample(0.0, 1.0, 2.0)])
+    (win,) = capture_windows_from_trace(events, cap, STAGE_INFO)
+    assert (win.t0, win.t1) == (0.0, 1.0)
+    assert win.energy_j == pytest.approx(2.0)
+    assert win.alloc_s == {BIG: 2.0, LITTLE: 1.0}
+    assert win.busy_s[(BIG, 1.0)] == pytest.approx(0.8)
+    assert win.busy_s[(LITTLE, 1.0)] == pytest.approx(0.2)
+
+    # spans summing past the allocation are clamped down to it
+    crowded = [
+        _span("w", "window", 0.0, 1e6, args={"index": 0}),
+        _span("beta", "frame", 0.0, 0.7e6, tid=1),
+        _span("beta", "frame", 0.0, 0.7e6, tid=2),  # 1.4 s on 1 core
+    ]
+    (win,) = capture_windows_from_trace(crowded, cap, STAGE_INFO)
+    assert win.busy_s[(LITTLE, 1.0)] == pytest.approx(win.alloc_s[LITTLE])
+
+
+# ======================================================= energy attribution
+def test_attribution_closure_busy_weighted():
+    """Stage shares must sum to the measured total exactly; without a
+    power model the split is pure busy-time pro-rata."""
+    events = [
+        _span("alpha", "frame", 0.0, 0.5e6, tid=1),
+        _span("beta", "frame", 0.0, 0.25e6, tid=2),
+    ]
+    cap = PowerCapture([PowerSample(0.0, 1.0, 3.0)])
+    attr = attribute_energy(events, cap)
+    # the trace extent ends at 0.5 s: only that half of the capture is
+    # attributable; the rest is reported, not smeared over the stages
+    assert attr.measured_j == pytest.approx(1.5)
+    assert attr.unattributed_j == pytest.approx(1.5)
+    by_name = {s.name: s for s in attr.stages}
+    assert sum(s.attributed_j for s in attr.stages) \
+        == pytest.approx(attr.measured_j, rel=1e-12)
+    assert by_name["alpha"].attributed_j == pytest.approx(1.0)
+    assert by_name["beta"].attributed_j == pytest.approx(0.5)
+
+
+def test_attribution_with_model_reconciles_prediction():
+    """With stage_info + power model the weights ARE the model's joules,
+    so attribution closes AND reconciles: zero prediction error when the
+    capture was synthesized from the same model."""
+    extent = 1.0
+    busy = {"alpha": 0.6, "beta": 0.9}
+    events = [
+        _span("alpha", "frame", 0.0, busy["alpha"] / 2 * 1e6, tid=1),
+        _span("alpha", "frame", 0.0, busy["alpha"] / 2 * 1e6, tid=2),
+        _span("beta", "frame", 0.0, busy["beta"] * 1e6, tid=3),
+        _span("pad", "frame", 0.0, extent * 1e6, tid=4),
+    ]
+    # ground truth: model-charged joules per stage (busy + idle slack)
+    predicted = {
+        "alpha": busy["alpha"] * POWER.busy_watts(BIG)
+        + (2 * extent - busy["alpha"]) * POWER.idle_watts(BIG),
+        "beta": busy["beta"] * POWER.busy_watts(LITTLE)
+        + (extent - busy["beta"]) * POWER.idle_watts(LITTLE),
+    }
+    info = dict(STAGE_INFO)
+    info["pad"] = {"ctype": LITTLE, "freq": 1.0, "cores": 1}
+    predicted["pad"] = extent * POWER.busy_watts(LITTLE)
+    cap = PowerCapture([PowerSample(0.0, extent,
+                                    sum(predicted.values()))])
+    attr = attribute_energy(events, cap, stage_info=info, power=POWER)
+    assert sum(s.attributed_j for s in attr.stages) \
+        == pytest.approx(attr.measured_j, rel=1e-12)
+    assert attr.prediction_error == pytest.approx(0.0, abs=1e-9)
+    for s in attr.stages:
+        assert s.attributed_j == pytest.approx(predicted[s.name])
+        assert s.predicted_j == pytest.approx(predicted[s.name])
+    assert attr.unattributed_j == pytest.approx(0.0, abs=1e-12)
+
+
+def test_attribution_reports_energy_outside_trace_extent():
+    events = [_span("alpha", "frame", 0.0, 1e6, tid=1)]
+    cap = PowerCapture([PowerSample(0.0, 4.0, 8.0)])  # 3 s beyond trace
+    attr = attribute_energy(events, cap)
+    assert attr.measured_j == pytest.approx(2.0)   # inside the extent
+    assert attr.unattributed_j == pytest.approx(6.0)
+
+
+# ========================================================== trace_diff gate
+def _governed_metrics():
+    return {
+        "p99_period_s": 0.004, "stage.s0-1.p99_period_s": 0.004,
+        "stage.s0-1.utilization": 0.8, "frames": 200.0,
+        "over_cap_windows": 0.0, "dropped_records": 0.0,
+        "deadline_misses": 0.0, "rebuild_count": 2.0,
+        "rebuild_stall_s": 0.01, "extent_s": 1.0,
+    }
+
+
+def test_trace_diff_self_diff_clean_and_10pct_period_flagged():
+    """ISSUE acceptance: golden-vs-golden passes; +10% p99 period is
+    beyond the default +5% allowance and must flag."""
+    td = _load_tool("trace_diff")
+    base = _governed_metrics()
+    rows = td.diff(base, dict(base), td.DEFAULT_THRESHOLDS)
+    assert not any(r["regressed"] for r in rows)
+
+    worse = dict(base)
+    worse["p99_period_s"] = base["p99_period_s"] * 1.10
+    rows = td.diff(base, worse, td.DEFAULT_THRESHOLDS)
+    bad = [r["metric"] for r in rows if r["regressed"]]
+    assert bad == ["p99_period_s"]
+    md = td.render_markdown(rows, "golden", "current")
+    assert "**REGRESSED**" in md
+
+    # within the +5% allowance: clean
+    ok = dict(base)
+    ok["p99_period_s"] = base["p99_period_s"] * 1.04
+    assert not any(r["regressed"] for r in
+                   td.diff(base, ok, td.DEFAULT_THRESHOLDS))
+
+
+def test_trace_diff_zero_increase_counters_and_overrides():
+    td = _load_tool("trace_diff")
+    base = _governed_metrics()
+    worse = dict(base)
+    worse["dropped_records"] = 1.0   # any increase on a zero-gate
+    worse["frames"] = 150.0          # ungated: report-only
+    rows = {r["metric"]: r for r in
+            td.diff(base, worse, td.DEFAULT_THRESHOLDS)}
+    assert rows["dropped_records"]["regressed"]
+    assert not rows["frames"]["gated"]
+    # decreases never flag, overrides are first-match-wins
+    better = dict(base)
+    better["rebuild_count"] = 0.0
+    assert not any(r["regressed"] for r in
+                   td.diff(base, better, td.DEFAULT_THRESHOLDS))
+    thresholds = [td.parse_thresh("dropped_records=off")] \
+        + td.DEFAULT_THRESHOLDS
+    rows = {r["metric"]: r for r in td.diff(base, worse, thresholds)}
+    assert not rows["dropped_records"]["gated"]
+    with pytest.raises(ValueError):
+        td.parse_thresh("no-equals-sign")
+
+
+def test_trace_diff_cli_save_summary_then_gate(tmp_path):
+    """End-to-end CLI: summarize a real trace, self-diff clean (exit 0),
+    then a perturbed summary regresses (exit 1) and writes reports."""
+    td = _load_tool("trace_diff")
+    trace = tmp_path / "trace.json"
+    trace.write_text(json.dumps({"traceEvents": [
+        _span("alpha", "frame", i * 1e4, 5e3, tid=1, args={"seq": i})
+        for i in range(50)
+    ], "displayTimeUnit": "ms"}))
+    golden = tmp_path / "golden.json"
+    assert td.main(["--save-summary", str(golden), str(trace)]) == 0
+    saved = json.loads(golden.read_text())
+    assert saved["schema"] == td.SCHEMA
+    assert td.main([str(golden), str(trace)]) == 0
+
+    worse = dict(saved["metrics"])
+    worse["stage.alpha.p99_period_s"] *= 1.10
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": td.SCHEMA, "source": "x",
+                               "metrics": worse}))
+    md, js = tmp_path / "diff.md", tmp_path / "diff.json"
+    assert td.main([str(golden), str(bad), "--markdown", str(md),
+                    "--json", str(js)]) == 1
+    assert "**REGRESSED**" in md.read_text()
+    assert any(r["regressed"] for r in
+               json.loads(js.read_text())["rows"])
+    # unreadable input is a usage error, not a crash
+    assert td.main([str(golden), str(tmp_path / "missing.json")]) == 2
+
+
+def test_trace_diff_merges_extra_scalar_metrics(tmp_path):
+    td = _load_tool("trace_diff")
+    base, cur = _governed_metrics(), _governed_metrics()
+    extra = tmp_path / "results.json"
+    extra.write_text(json.dumps({"joules_per_token": 0.5,
+                                 "label": "ignored", "ok": True}))
+    merged = td.merge_extras(dict(cur), extra)
+    assert merged["joules_per_token"] == 0.5
+    assert "label" not in merged and "ok" not in merged
+    rows = td.diff(base, merged,
+                   [td.parse_thresh("joules_per_token=0.02")]
+                   + td.DEFAULT_THRESHOLDS)
+    by = {r["metric"]: r for r in rows}
+    assert by["joules_per_token"]["gated"] \
+        and not by["joules_per_token"]["regressed"]
+
+
+# ======================================================== trace_report gate
+def test_trace_report_fail_on_conditions(tmp_path):
+    tr = _load_tool("trace_report")
+    clean = tmp_path / "clean.json"
+    clean.write_text(json.dumps({"traceEvents": [
+        _span("alpha", "frame", 0.0, 1e4, tid=1)]}))
+    dirty = tmp_path / "dirty.json"
+    dirty.write_text(json.dumps({"traceEvents": [
+        _span("alpha", "frame", 0.0, 1e4, tid=1),
+        {"ph": "i", "name": "serve/deadline_miss", "pid": 1, "tid": 1,
+         "ts": 2e4, "args": {"count": 3}},
+        {"ph": "M", "name": "trace_metadata", "pid": 1, "tid": 0,
+         "args": {"dropped_records": 7}},
+    ]}))
+    gate = "--fail-on=over_cap,deadline_miss,dropped_records"
+    assert tr.main([str(clean), gate]) == 0
+    assert tr.main([str(dirty), gate]) == 2
+    assert tr.main([str(dirty), "--fail-on=over_cap"]) == 0
+    # report numbers behind the gate
+    report = analyze_trace(json.loads(dirty.read_text())["traceEvents"])
+    assert report.deadline_misses == 3
+    assert report.dropped_records == 7
+    with pytest.raises(SystemExit):
+        tr.main([str(clean), "--fail-on=not_a_condition"])

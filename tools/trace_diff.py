@@ -1,0 +1,258 @@
+"""Diff two trace/metrics snapshots against regression thresholds.
+
+The regression gate of the observability layer: compare a *current*
+trace (or saved summary) against a committed *baseline* and fail CI when
+a watched metric regressed — per-stage utilization and p99 period,
+bottleneck p99 period, over-cap windows, measured-over-cap power
+samples, rebuild count/stall, dropped trace records, deadline misses,
+plus any extra scalar metrics merged in (e.g. a serving run's
+``joules_per_token``).
+
+Each side may be:
+
+  - a ``trace.json`` (``repro.obs.export.write_perfetto`` output or any
+    Chrome trace-event JSON) — summarized on the fly via
+    ``repro.obs.report.analyze_trace``;
+  - a summary JSON previously written by ``--save-summary`` (schema
+    marker ``trace-diff-summary/v1``) — the committed-golden form, so
+    the repo stores small stable numbers instead of whole traces.
+
+Thresholds are ``PATTERN=SPEC`` pairs matched first-wins against flat
+metric names (fnmatch wildcards). SPEC is a relative increase allowed
+before flagging (``0.05`` = +5%), ``zero`` (any increase flags — the
+default for the deterministic counters), or ``off`` (report-only).
+Metrics without a matching pattern are report-only. Defaults:
+
+  over_cap_windows / over_cap_power_samples / dropped_records /
+  deadline_misses / rebuild_count = zero;
+  p99_period_s / stage.*.p99_period_s = 0.05;  rebuild_stall_s = 0.5
+
+All gated metrics are bad-when-higher; decreases never flag.
+
+  PYTHONPATH=src python tools/trace_diff.py baseline.json current.json
+  PYTHONPATH=src python tools/trace_diff.py golden.json trace.json \\
+      --thresh 'stage.*.p99_period_s=0.25' --markdown diff.md
+  PYTHONPATH=src python tools/trace_diff.py --save-summary golden.json \\
+      trace.json
+
+Exit codes: 0 clean, 1 regressions found, 2 usage/load error.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import analyze_trace, load_trace  # noqa: E402
+
+SCHEMA = "trace-diff-summary/v1"
+
+DEFAULT_THRESHOLDS: list[tuple[str, float | None]] = [
+    ("over_cap_windows", 0.0),
+    ("over_cap_power_samples", 0.0),
+    ("dropped_records", 0.0),
+    ("deadline_misses", 0.0),
+    ("rebuild_count", 0.0),
+    ("p99_period_s", 0.05),
+    ("stage.*.p99_period_s", 0.05),
+    ("rebuild_stall_s", 0.5),
+]
+
+
+def summarize(report) -> dict[str, float]:
+    """Flatten a TraceReport into the diffable metric dict."""
+    out: dict[str, float] = {
+        "extent_s": report.extent_s,
+        "frames": float(sum(s.frames for s in report.stages)),
+        "p99_period_s": report.p99_period_s,
+        "rebuild_count": float(report.rebuild_count),
+        "rebuild_stall_s": report.rebuild_stall_s,
+        "decisions": float(len(report.decisions)),
+        "over_cap_windows": float(report.over_cap_windows),
+        "over_cap_power_samples": float(report.over_cap_power_samples),
+        "dropped_records": float(report.dropped_records),
+        "deadline_misses": float(report.deadline_misses),
+    }
+    for s in report.stages:
+        out[f"stage.{s.name}.utilization"] = s.utilization
+        out[f"stage.{s.name}.frames"] = float(s.frames)
+        out[f"stage.{s.name}.p99_period_s"] = s.p99_period_s
+        out[f"stage.{s.name}.p99_frame_s"] = s.p99_frame_s
+    return out
+
+
+def load_side(path: Path) -> dict[str, float]:
+    """Load one side: a trace.json or a saved summary."""
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if isinstance(data, dict) and data.get("schema") == SCHEMA:
+        return {k: float(v) for k, v in data["metrics"].items()}
+    if isinstance(data, list) or (isinstance(data, dict)
+                                  and "traceEvents" in data):
+        return summarize(analyze_trace(load_trace(path)))
+    raise ValueError(
+        f"{path}: neither a Chrome trace nor a {SCHEMA} summary")
+
+
+def parse_thresh(spec: str) -> tuple[str, float | None]:
+    pattern, _, value = spec.partition("=")
+    if not pattern or not value:
+        raise ValueError(f"--thresh wants PATTERN=SPEC, got {spec!r}")
+    value = value.strip().lower()
+    if value == "zero":
+        return pattern, 0.0
+    if value in ("off", "inf", "none"):
+        return pattern, None
+    return pattern, float(value)
+
+
+def threshold_for(name: str,
+                  thresholds) -> tuple[str, float | None] | None:
+    for pattern, rel in thresholds:
+        if fnmatch.fnmatch(name, pattern):
+            return pattern, rel
+    return None
+
+
+def diff(baseline: dict, current: dict, thresholds) -> list[dict]:
+    """One row per metric across both sides, regression-flagged."""
+    rows = []
+    for name in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(name), current.get(name)
+        match = threshold_for(name, thresholds)
+        gated = match is not None and match[1] is not None
+        regressed = False
+        if gated and b is not None and c is not None:
+            rel = match[1]
+            regressed = c > b * (1.0 + rel) + 1e-12
+        rows.append({
+            "metric": name,
+            "baseline": b,
+            "current": c,
+            "delta": (c - b) if b is not None and c is not None else None,
+            "threshold": (match[1] if match else None),
+            "gated": gated,
+            "regressed": regressed,
+        })
+    return rows
+
+
+def render_markdown(rows, baseline_path, current_path) -> str:
+    bad = [r for r in rows if r["regressed"]]
+    lines = [
+        "# trace diff",
+        "",
+        f"baseline: `{baseline_path}`  ",
+        f"current: `{current_path}`  ",
+        f"verdict: {'**%d regression(s)**' % len(bad) if bad else 'clean'}",
+        "",
+        "| metric | baseline | current | delta | allowed | status |",
+        "|---|---:|---:|---:|---:|---|",
+    ]
+
+    def fmt(v):
+        if v is None:
+            return "—"
+        return f"{v:.6g}"
+
+    for r in rows:
+        if r["gated"]:
+            status = "**REGRESSED**" if r["regressed"] else "ok"
+        else:
+            status = "info"
+        allowed = "—" if r["threshold"] is None \
+            else f"+{100 * r['threshold']:g}%"
+        lines.append(
+            f"| {r['metric']} | {fmt(r['baseline'])} | {fmt(r['current'])}"
+            f" | {fmt(r['delta'])} | {allowed} | {status} |")
+    return "\n".join(lines) + "\n"
+
+
+def merge_extras(metrics: dict, path: Path | None) -> dict:
+    if path is None:
+        return metrics
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict):
+        raise ValueError(f"{path}: extra metrics must be a JSON object")
+    for k, v in data.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            metrics[k] = float(v)
+    return metrics
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", type=Path, nargs="?",
+                    help="baseline trace.json or saved summary")
+    ap.add_argument("current", type=Path,
+                    help="current trace.json or saved summary")
+    ap.add_argument("--thresh", action="append", default=[],
+                    metavar="PATTERN=SPEC",
+                    help="override a threshold (first match wins, "
+                         "checked before the defaults); SPEC is a "
+                         "relative increase, 'zero', or 'off'")
+    ap.add_argument("--extra-baseline", type=Path,
+                    help="flat JSON of extra scalar metrics merged into "
+                         "the baseline side (e.g. a run's results file)")
+    ap.add_argument("--extra-current", type=Path,
+                    help="flat JSON of extra scalar metrics merged into "
+                         "the current side")
+    ap.add_argument("--save-summary", type=Path, metavar="OUT",
+                    help="write the CURRENT side's summary JSON (the "
+                         "committed-golden form) and exit; baseline "
+                         "may be omitted")
+    ap.add_argument("--markdown", type=Path,
+                    help="also write the diff as a markdown report")
+    ap.add_argument("--json", type=Path, dest="json_out",
+                    help="also write the diff rows as JSON")
+    args = ap.parse_args(argv)
+
+    try:
+        current = merge_extras(load_side(args.current),
+                               args.extra_current)
+        if args.save_summary is not None:
+            args.save_summary.write_text(
+                json.dumps({"schema": SCHEMA, "source": str(args.current),
+                            "metrics": current},
+                           indent=2, sort_keys=True) + "\n",
+                encoding="utf-8")
+            print(f"wrote {args.save_summary} "
+                  f"({len(current)} metrics)")
+            if args.baseline is None:
+                return 0
+        if args.baseline is None:
+            ap.error("baseline is required unless --save-summary is the "
+                     "only action")
+        baseline = merge_extras(load_side(args.baseline),
+                                args.extra_baseline)
+        thresholds = [parse_thresh(s) for s in args.thresh] \
+            + DEFAULT_THRESHOLDS
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"trace_diff: {exc}", file=sys.stderr)
+        return 2
+
+    rows = diff(baseline, current, thresholds)
+    md = render_markdown(rows, args.baseline, args.current)
+    print(md, end="")
+    if args.markdown is not None:
+        args.markdown.write_text(md, encoding="utf-8")
+    if args.json_out is not None:
+        args.json_out.write_text(
+            json.dumps({"baseline": str(args.baseline),
+                        "current": str(args.current), "rows": rows},
+                       indent=2) + "\n", encoding="utf-8")
+    bad = [r for r in rows if r["regressed"]]
+    for r in bad:
+        print(f"REGRESSED: {r['metric']} {r['baseline']:.6g} -> "
+              f"{r['current']:.6g} (allowed +{100 * r['threshold']:g}%)",
+              file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,14 @@ numbers behind what the Perfetto UI shows visually.
 
   PYTHONPATH=src python tools/trace_report.py trace.json
   PYTHONPATH=src python tools/trace_report.py trace.json --json
+  PYTHONPATH=src python tools/trace_report.py trace.json \\
+      --fail-on over_cap,deadline_miss,dropped_records
+
+``--fail-on`` turns the report into a CI gate: exit nonzero when the
+trace contains any of the named conditions (``over_cap`` — over-cap
+windows or measured power samples above the cap track;
+``deadline_miss`` — serve deadline misses; ``dropped_records`` — tracer
+ring overflow recorded in the trace metadata).
 """
 from __future__ import annotations
 
@@ -20,13 +28,31 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.obs import analyze_trace, load_trace  # noqa: E402
 
+# --fail-on condition -> (human label, count extractor)
+FAIL_CONDITIONS = {
+    "over_cap": ("over-cap windows / power samples",
+                 lambda r: r.over_cap_windows + r.over_cap_power_samples),
+    "deadline_miss": ("deadline misses", lambda r: r.deadline_misses),
+    "dropped_records": ("dropped trace records",
+                        lambda r: r.dropped_records),
+}
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", type=Path, help="trace.json path")
     ap.add_argument("--json", action="store_true",
                     help="emit the report as JSON instead of text")
+    ap.add_argument(
+        "--fail-on", default="", metavar="COND[,COND...]",
+        help="exit nonzero when the trace shows any of: "
+             + ", ".join(FAIL_CONDITIONS))
     args = ap.parse_args(argv)
+    conditions = [c for c in args.fail_on.split(",") if c]
+    unknown = [c for c in conditions if c not in FAIL_CONDITIONS]
+    if unknown:
+        ap.error(f"unknown --fail-on condition(s) {unknown}; "
+                 f"choose from {list(FAIL_CONDITIONS)}")
 
     events = load_trace(args.trace)
     if not events:
@@ -38,7 +64,14 @@ def main(argv=None) -> int:
     else:
         print(f"# {args.trace} ({len(events)} events)")
         print(report.describe())
-    return 0
+    failed = 0
+    for cond in conditions:
+        label, count = FAIL_CONDITIONS[cond]
+        n = count(report)
+        if n > 0:
+            print(f"FAIL[{cond}]: {n} {label}", file=sys.stderr)
+            failed += 1
+    return 2 if failed else 0
 
 
 if __name__ == "__main__":
