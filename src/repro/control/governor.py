@@ -249,6 +249,7 @@ class Governor:
         slo_period: float | None = None,
         slo_tolerance: float = 0.1,
         tracer=None,
+        rebuild_mode: str = "handoff",
     ):
         if drift_tolerance <= 0:
             raise ValueError("drift_tolerance must be positive")
@@ -262,6 +263,8 @@ class Governor:
             raise ValueError("slo_period must be positive")
         if slo_tolerance < 0:
             raise ValueError("slo_tolerance must be non-negative")
+        if rebuild_mode not in ("handoff", "drain"):
+            raise ValueError(f"unknown rebuild_mode {rebuild_mode!r}")
         self.chain = chain
         self.b = b
         self.l = l
@@ -277,6 +280,10 @@ class Governor:
         self.freq_levels = freq_levels
         self.slo_period = slo_period
         self.slo_tolerance = slo_tolerance
+        # how adopted plans are swapped into the runtime: "handoff"
+        # (zero-drain live handoff — re-plans invisible to traffic) or
+        # "drain" (conservative stop-the-world fallback)
+        self.rebuild_mode = rebuild_mode
         # optional repro.obs.Tracer: decision instants from every adopt,
         # cap_w / power_w / predicted_w / power_margin counter samples
         # from every metered observe tick (docs/observability.md)
@@ -777,5 +784,5 @@ class Governor:
             # drift rebuilds even on an identical decomposition: stage fns
             # may embed recalibrated latencies
             if old is not None:  # the initial plan is materialized outside
-                self.runtime.rebuild(self._plan)
+                self.runtime.rebuild(self._plan, mode=self.rebuild_mode)
         return event

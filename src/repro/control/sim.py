@@ -193,6 +193,7 @@ def run_scenario(
     meter_power=None,
     tracer=None,
     metrics=None,
+    executor: str = "thread",
 ) -> ScenarioResult:
     """Drive ``governor`` end to end against a sleep-simulated runtime.
 
@@ -222,6 +223,12 @@ def run_scenario(
     the same windows into counters (frames fed/delivered/dropped,
     re-plans) and histograms (``scenario/period_us``,
     ``scenario/period_err``, ``scenario/power_w``).
+
+    ``executor`` selects the runtime backend (``"thread"`` or
+    ``"process"``); the sleep-simulated stages are picklable-free under
+    fork, so both backends run the same scenario. Note the sleep
+    builder already scales by 1/freq itself, so the runtime's
+    ``enforce_freq`` duty-cycle throttle stays off here.
     """
     base_chain = governor.chain
     knobs: dict = {"latency_scale": 1.0}
@@ -234,7 +241,7 @@ def run_scenario(
     runtime = StreamingPipelineRuntime.from_plan(
         governor.plan, builder, queue_depth=queue_depth,
         power=meter_power if meter_power is not None else governor.power,
-        tracer=tracer)
+        tracer=tracer, executor=executor)
     governor.attach(runtime)
     runtime.start()
 

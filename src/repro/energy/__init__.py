@@ -43,6 +43,7 @@ from .pareto import (  # noqa: F401
     freqherad,
     min_energy_under_period,
     min_energy_under_period_freq,
+    min_energy_under_period_freq_batch,
     min_energy_under_period_freq_reference,
     min_energy_under_period_reference,
     min_energy_meeting_deadline,

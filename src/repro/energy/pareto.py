@@ -47,7 +47,11 @@ mirroring the lexicographic-min-as-elementwise-select recipe documented in
 
 - :func:`pareto_frontier` / :func:`dvfs_frontier`: the non-dominated
   subset, optionally re-optimized per surviving period level by the exact
-  DP — all refinement queries share one :class:`CandidateTable`.
+  DP. Refinement is ONE batched DP across all S surviving period levels
+  (:func:`min_energy_under_period_freq_batch` — a shared ``(S, b+1,
+  l+1)`` budget volume with per-bound masked plane updates), not S
+  sequential queries; all bounds share one :class:`CandidateTable` and
+  the result is bit-identical per bound to the scalar entry points.
 
 A final tool inverts the constraint: :func:`min_period_under_power`
 returns the fastest frontier point whose average draw fits under an
@@ -292,6 +296,44 @@ class CandidateTable:
             out[v] = (r, cost, feas)
         return out
 
+    def query_batch(self, b: int, l: int, p_maxes) -> dict:
+        """:meth:`query` over a whole vector of period bounds at once.
+
+        Returns ``{v: (r, cost, feasible)}`` arrays of shape
+        ``(S, |F_v|, n, n)`` for ``S = len(p_maxes)`` — the ``s``-th
+        slice is elementwise identical to ``query(b, l, p_maxes[s])``:
+        every operation below is the scalar query's with a broadcast
+        leading axis, and numpy elementwise float ops are deterministic
+        per element regardless of batching. Frontier refinement prices
+        all of a frontier's period levels through one call instead of S
+        sequential queries.
+        """
+        p = np.asarray(p_maxes, dtype=np.float64)[:, None, None, None]
+        out = {}
+        for v in (BIG, LITTLE):
+            cap = b if v == BIG else l
+            work = self.works[v]
+            r_real = np.maximum(1.0, np.ceil(work[None] / p - _CEIL_EPS))
+            feas = self._tri[None, None, :, :] & np.where(
+                self.rep[None, None, :, :], r_real <= cap, r_real <= 1.0)
+            if cap <= 0:
+                feas &= False
+            r = np.where(self.rep[None, None, :, :], r_real, 1.0)
+            r = np.minimum(r, max(cap, 1)).astype(np.int64)
+            cost = np.zeros(r_real.shape)
+            for fi, f in enumerate(self.levels[v]):
+                busy, idle = stage_energy_terms(
+                    work[fi], r[:, fi], v, p[:, 0], self.power, f)
+                cost[:, fi] = busy + idle
+            for fi in range(1, len(self.levels[v])):
+                dominated = np.zeros(feas[:, fi].shape, dtype=bool)
+                for fj in range(fi):
+                    dominated |= feas[:, fj] & (r[:, fj] == r[:, fi]) \
+                        & (cost[:, fj] <= cost[:, fi])
+                feas[:, fi] &= ~dominated
+            out[v] = (r, cost, feas)
+        return out
+
 
 def _min_energy_dp(table: CandidateTable, b: int, l: int,
                    p_max: float) -> FreqSolution:
@@ -372,6 +414,110 @@ def _min_energy_dp(table: CandidateTable, b: int, l: int,
     return FreqSolution(tuple(reversed(stages))).merge_replicable(chain)
 
 
+def _min_energy_dp_batch(table: CandidateTable, b: int, l: int,
+                         p_maxes) -> list[FreqSolution]:
+    """S period-bound DPs over one shared (S, b+1, l+1) budget volume.
+
+    Per bound ``s`` this is bit-identical to ``_min_energy_dp(table, b,
+    l, p_maxes[s])``: candidates are priced for all bounds in one
+    :meth:`CandidateTable.query_batch`, the union of per-bound feasible
+    candidates is enumerated once in the scalar DP's (stage start, core
+    type, level) order, and each candidate updates only the planes of
+    the bounds it is feasible for (grouped by its per-bound replica
+    count, since the replica count fixes the budget shift). A candidate
+    infeasible for bound ``s`` is a masked no-op there, so the effective
+    update sequence per bound — and with it every strict-< tie-break —
+    matches the scalar run's exactly. Frontier refinement calls this
+    once across all S surviving period levels instead of S sequential
+    ``_min_energy_dp`` runs.
+    """
+    chain = table.chain
+    n = chain.n
+    p = np.asarray(p_maxes, dtype=np.float64)
+    S = len(p)
+    ok = np.isfinite(p) & (p > 0)
+    if S == 0:
+        return []
+    if b + l <= 0 or not ok.any():
+        return [EMPTY_FREQ_SOLUTION] * S
+    # invalid bounds get a dummy 1.0 query and a fully masked-off plane
+    q = table.query_batch(b, l, np.where(ok, p, 1.0))
+    # union candidate enumeration, in the scalar DP's order: stage start
+    # ascending, big before little, ladder ascending
+    jjs, iis, vvs, ffs, rss, css, mss = [], [], [], [], [], [], []
+    for vflag, v in enumerate((BIG, LITTLE)):
+        rv, cv, fev = q[v]
+        fev &= ok[:, None, None, None]
+        ff, ii, jj = np.nonzero(fev.any(axis=0))
+        jjs.append(jj)
+        iis.append(ii)
+        vvs.append(np.full(len(jj), vflag, dtype=np.int8))
+        ffs.append(np.asarray(table.levels[v])[ff])
+        rss.append(rv[:, ff, ii, jj])
+        css.append(cv[:, ff, ii, jj])
+        mss.append(fev[:, ff, ii, jj])
+    jj = np.concatenate(jjs)
+    ii = np.concatenate(iis)
+    vv = np.concatenate(vvs)
+    fv = np.concatenate(ffs)
+    order = np.lexsort((fv, vv, ii, jj))
+    jj, ii, vv, fv = jj[order], ii[order], vv[order], fv[order]
+    rr = np.concatenate(rss, axis=1)[:, order]   # (S, m) replica counts
+    cc = np.concatenate(css, axis=1)[:, order]   # (S, m) costs
+    mm = np.concatenate(mss, axis=1)[:, order]   # (S, m) feasibility
+    bounds = np.searchsorted(jj, np.arange(n + 1))
+    E = np.full((n, S, b + 1, l + 1), math.inf)
+    pid = np.full((n, S, b + 1, l + 1), -1, dtype=np.int32)
+    for j in range(n):
+        lo_, hi_ = int(bounds[j]), int(bounds[j + 1])
+        Ej, pj = E[j], pid[j]
+        for cidx in range(lo_, hi_):
+            i = int(ii[cidx])
+            vbig = vv[cidx] == 0
+            rs, costs, smask = rr[:, cidx], cc[:, cidx], mm[:, cidx]
+            # bounds sharing this candidate's replica count share its
+            # budget shift — one masked plane update per distinct count
+            for r_ in np.unique(rs[smask]).tolist():
+                db, dl = (int(r_), 0) if vbig else (0, int(r_))
+                g = smask & (rs == r_)
+                if i == 0:
+                    tgt = Ej[:, db, dl]
+                    m = g & (costs < tgt)
+                    if m.any():
+                        np.copyto(tgt, costs, where=m)
+                        np.copyto(pj[:, db, dl], cidx - lo_, where=m,
+                                  casting="unsafe")
+                    continue
+                nE = E[i - 1][:, : b + 1 - db, : l + 1 - dl] \
+                    + costs[:, None, None]
+                tgt = Ej[:, db:, dl:]
+                m = (nE < tgt) & g[:, None, None]
+                if m.any():
+                    np.copyto(tgt, nE, where=m)
+                    np.copyto(pj[:, db:, dl:], cidx - lo_, where=m,
+                              casting="unsafe")
+    end = E[n - 1].reshape(S, -1)
+    ks = np.argmin(end, axis=1)  # C-order first min == lex min, per s
+    sols: list[FreqSolution] = []
+    for s in range(S):
+        if not ok[s] or not math.isfinite(end[s, ks[s]]):
+            sols.append(EMPTY_FREQ_SOLUTION)
+            continue
+        ub, ul = divmod(int(ks[s]), l + 1)
+        stages: list[FreqStage] = []
+        j = n - 1
+        while j >= 0:
+            cidx = int(bounds[j]) + int(pid[j][s, ub, ul])
+            i, r_ = int(ii[cidx]), int(rr[s, cidx])
+            vt = BIG if vv[cidx] == 0 else LITTLE
+            stages.append(FreqStage(i, j, r_, vt, float(fv[cidx])))
+            db, dl = (r_, 0) if vt == BIG else (0, r_)
+            j, ub, ul = i - 1, ub - db, ul - dl
+        sols.append(
+            FreqSolution(tuple(reversed(stages))).merge_replicable(chain))
+    return sols
+
+
 # ------------------------------------------------------- energy-constrained
 def min_energy_under_period_freq(
     chain: TaskChain, b: int, l: int, p_max: float,
@@ -412,6 +558,32 @@ def min_energy_under_period_freq(
     if candidates is None:
         candidates = CandidateTable.build(chain, power, freq_levels)
     return _min_energy_dp(candidates, b, l, p_max)
+
+
+def min_energy_under_period_freq_batch(
+    chain: TaskChain, b: int, l: int, p_maxes,
+    power: PowerModel = DEFAULT_DVFS_POWER,
+    freq_levels=None,
+    candidates: CandidateTable | None = None,
+) -> list[FreqSolution]:
+    """:func:`min_energy_under_period_freq` over a vector of bounds.
+
+    Returns one :class:`~repro.core.dvfs.FreqSolution` per entry of
+    ``p_maxes``, bit-identical — schedules, energies, tie-breaking — to
+    S independent calls of the scalar entry point, but solved in one
+    shared DP volume (:func:`_min_energy_dp_batch`): one batched
+    candidate pricing, one candidate enumeration, and plane updates
+    masked per bound. Non-finite or non-positive bounds yield
+    ``EMPTY_FREQ_SOLUTION`` at their slot, matching the scalar guard.
+    This is the refinement kernel of :func:`pareto_frontier` and
+    :func:`dvfs_frontier`; the governor's single-bound re-plan queries
+    stay on the scalar path.
+    """
+    if b + l <= 0:
+        return [EMPTY_FREQ_SOLUTION] * len(list(p_maxes))
+    if candidates is None:
+        candidates = CandidateTable.build(chain, power, freq_levels)
+    return _min_energy_dp_batch(candidates, b, l, p_maxes)
 
 
 def min_energy_under_period_freq_reference(
@@ -899,17 +1071,19 @@ def pareto_frontier(
         return (bb, ll), lambda: extract_solution(table, chain, bb, ll)
 
     points = _survivor_points(feasible, period, en, cell_info)
-    if not refine:
+    if not refine or not points:
         return points
-    if points and candidates is None:
+    if candidates is None:
         candidates = CandidateTable.build(chain, power, (1.0,))
+    # all surviving period levels re-optimized by ONE batched DP
+    fsols = _min_energy_dp_batch(candidates, b, l,
+                                 [pt.period for pt in points])
     refined: list[ParetoPoint] = []
-    for pt in points:
-        sol = min_energy_under_period(chain, b, l, pt.period, power,
-                                      candidates=candidates)
-        if sol.is_empty():
+    for pt, fsol in zip(points, fsols):
+        if fsol.is_empty():
             refined.append(pt)
             continue
+        sol = fsol.to_solution()
         e = energy(chain, sol, power, period=pt.period)
         refined.append(
             ParetoPoint(pt.period, e, sol, sol.core_usage())
@@ -950,15 +1124,15 @@ def dvfs_frontier(
                 lambda: extract_dvfs_solution(tables, profile, bb, ll))
 
     points = _survivor_points(feasible, period, en, cell_info)
-    if not refine:
+    if not refine or not points:
         return points
-    if points and candidates is None:
+    if candidates is None:
         candidates = CandidateTable.build(chain, power, freq_levels)
+    # all surviving period levels re-optimized by ONE batched DP
+    fsols = _min_energy_dp_batch(candidates, b, l,
+                                 [pt.period for pt in points])
     refined: list[ParetoPoint] = []
-    for pt in points:
-        fsol = min_energy_under_period_freq(chain, b, l, pt.period, power,
-                                            freq_levels,
-                                            candidates=candidates)
+    for pt, fsol in zip(points, fsols):
         if fsol.is_empty():
             refined.append(pt)
             continue

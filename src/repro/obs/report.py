@@ -9,9 +9,12 @@ trace written by :func:`repro.obs.export.write_perfetto` and compute
   - **replica imbalance** — max/mean frames processed across a stage's
     replicas (work stealing should keep this near 1; a straggler shows
     up as the *other* replicas' ratio rising);
-  - **rebuild stall time** — total duration of ``runtime/rebuild``
-    drain-gap spans (the stop-the-world window the ROADMAP's
-    zero-drain-rebuild direction wants to eliminate);
+  - **rebuild stall time** — traffic-visible stall across
+    ``runtime/rebuild`` spans: live-handoff rebuilds contribute only
+    their fence exclusion (the span's ``stall_s`` arg — microseconds),
+    with the span duration itself accumulated separately as
+    ``rebuild_overlap_s`` (old/new stage sets running concurrently);
+    drain-mode spans stall for their full duration;
   - **governor decisions** — every re-plan instant with trigger label;
   - **over-cap intervals** — scenario windows whose active plan was
     predicted over the window's cap floor (the same definition as
@@ -61,13 +64,19 @@ class TraceReport:
     extent_s: float              # wall span covered by frame/window spans
     stages: tuple[StageStats, ...]
     rebuild_count: int
-    rebuild_stall_s: float       # total drain-gap time
+    rebuild_stall_s: float       # total traffic-visible stall (see below)
     decisions: tuple[dict, ...]  # governor instants, ts-ordered
     over_cap_windows: int        # window spans flagged over their cap floor
     over_cap_s: float            # total duration of those windows
     over_cap_power_samples: int  # measured power_w samples above cap_w
     dropped_records: int = 0     # ring overflow (trace_metadata record)
     deadline_misses: int = 0     # serve/deadline_miss instants (summed)
+    # live-handoff rebuilds overlap the old and new stage sets instead of
+    # draining: their span duration is the overlap window (accumulated
+    # here), while only their fence exclusion (args.stall_s) counts
+    # toward rebuild_stall_s. Drain-mode spans stall for their whole
+    # duration, so for them stall == span (and overlap contributes 0).
+    rebuild_overlap_s: float = 0.0
 
     @property
     def p99_period_s(self) -> float:
@@ -79,7 +88,8 @@ class TraceReport:
         lines = [f"trace extent {self.extent_s:.3f} s, "
                  f"{len(self.stages)} stages, "
                  f"{self.rebuild_count} rebuilds "
-                 f"({1e3 * self.rebuild_stall_s:.2f} ms stalled), "
+                 f"({1e3 * self.rebuild_stall_s:.2f} ms stalled, "
+                 f"{1e3 * self.rebuild_overlap_s:.2f} ms handoff overlap), "
                  f"{len(self.decisions)} governor decisions"]
         lines.append(f"  {'stage':>12} {'reps':>4} {'frames':>7} "
                      f"{'busy_s':>8} {'util':>6} {'imbal':>6} "
@@ -134,6 +144,22 @@ def analyze_trace(events: list[dict]) -> TraceReport:
                     if e.get("ph") == "X" and e.get("cat") == "window"]
     rebuilds = [e for e in events if e.get("ph") == "X"
                 and e.get("name") == "runtime/rebuild"]
+    # stall accounting, handoff-aware: a span carrying a stall_s arg
+    # (seconds) stalled traffic only for that long — its duration is the
+    # old/new overlap window. Spans without the arg predate the handoff
+    # protocol (or are drain-mode traces saved by older code): their
+    # whole duration was the stall.
+    rebuild_stall_s = 0.0
+    rebuild_overlap_s = 0.0
+    for e in rebuilds:
+        args = e.get("args") or {}
+        dur_s = e.get("dur", 0.0) / 1e6
+        if "stall_s" in args:
+            rebuild_stall_s += float(args["stall_s"])
+            if args.get("mode") == "handoff":
+                rebuild_overlap_s += dur_s
+        else:
+            rebuild_stall_s += dur_s
     decisions = sorted(
         (e for e in events
          if e.get("ph") == "i" and e.get("cat") == "governor"),
@@ -237,7 +263,8 @@ def analyze_trace(events: list[dict]) -> TraceReport:
         extent_s=extent_s,
         stages=tuple(stages),
         rebuild_count=len(rebuilds),
-        rebuild_stall_s=sum(e.get("dur", 0.0) for e in rebuilds) / 1e6,
+        rebuild_stall_s=rebuild_stall_s,
+        rebuild_overlap_s=rebuild_overlap_s,
         decisions=tuple(decision_rows),
         over_cap_windows=len(over),
         over_cap_s=over_cap_s,

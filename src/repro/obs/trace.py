@@ -179,6 +179,27 @@ class Tracer:
             return
         self._ring().append(("M", name, time.perf_counter(), 0.0, "", None))
 
+    def ingest(self, records: list, tid: int, dropped: int = 0) -> None:
+        """Absorb a foreign ring's raw records under ``tid``.
+
+        The cross-process merge path: a process-executor worker records
+        into its own process-local ``_Ring`` (it must not touch this
+        registry — the fork's copy of the lock is not shared) and ships
+        the raw tuples back over a pipe when it retires; the parent
+        calls ``ingest`` with the worker's pid as the row id. The
+        records join the next :meth:`drain` exactly as if a local
+        thread had recorded them — including their ``"M"`` thread-name
+        metadata, so exported rows keep the same ``{stage}/r{replica}``
+        naming on both executors. ``dropped`` carries the foreign
+        ring's overwrite count into :attr:`dropped_records`."""
+        if not self.enabled or (not records and not dropped):
+            return
+        ring = _Ring(max(len(records), 1), tid)
+        ring.buf = list(records)
+        ring.dropped = dropped
+        with self._lock:
+            self._rings.append(ring)
+
     # -------------------------------------------------------------- drain
     @property
     def dropped_records(self) -> int:

@@ -1237,7 +1237,8 @@ def test_runtime_rebuild_preserves_sequence_ids():
     assert r2["outputs"] == [(len(rt.stages), i) for i in range(12)]
     assert r1["seq_ids"] == list(range(12))
     assert r2["seq_ids"] == list(range(12, 24))  # counter survives rebuild
-    assert "rebuild" in events and events.count("start") == 2
+    # live handoff: the pipe never went down, so no second "start"
+    assert "rebuild" in events and events.count("start") == 1
 
 
 def test_runtime_on_event_payload_schema():
@@ -1261,26 +1262,30 @@ def test_runtime_on_event_payload_schema():
         on_event=lambda name, payload: events.append((name, payload)))
     rt.start()
     rt.run(list(range(4)))
-    rt.rebuild(Plan(herad(ch, 1, 1)))
-    rt.rebuild(Plan(herad(ch, 2, 1)))
+    rt.rebuild(Plan(herad(ch, 1, 1)))                # live handoff (default)
+    rt.rebuild(Plan(herad(ch, 2, 1)), mode="drain")  # stop-the-world path
     rt.stop()
 
     names = [n for n, _ in events]
-    # each running rebuild stops the old workers (emitting "stop" under
-    # the outgoing plan) before announcing the new plan and restarting
-    assert names == ["start", "stop", "rebuild", "start",
+    # a handoff rebuild emits only "rebuild" — the pipe never goes down;
+    # a drain rebuild keeps the historical stop (old plan) / rebuild /
+    # start (new plan) sequence
+    assert names == ["start", "rebuild",
                      "stop", "rebuild", "start", "stop"]
     for _, payload in events:
         assert isinstance(payload["t"], float)
         assert isinstance(payload["plan_seq"], int)
     ts = [p["t"] for _, p in events]
     assert ts == sorted(ts)  # perf_counter stamps, monotonic
-    # rebuild reports the NEW plan's seq; the stop inside it the old one's
-    assert [p["plan_seq"] for _, p in events] == [0, 0, 1, 1, 1, 2, 2, 2]
+    # rebuild reports the NEW plan's seq; the stop inside drain the old's
+    assert [p["plan_seq"] for _, p in events] == [0, 1, 1, 2, 2, 2]
     for name, payload in events:
         if name in ("start", "rebuild"):
             stages = payload["stages"]
             assert stages and all(isinstance(s, str) for s in stages)
+        if name == "rebuild":
+            assert payload["mode"] in ("handoff", "drain")
+            assert isinstance(payload["fence"], int)
 
 
 def test_runtime_rebuild_requires_builder():

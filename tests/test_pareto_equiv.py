@@ -37,6 +37,7 @@ from repro.energy import (
     energy,
     min_energy_under_period,
     min_energy_under_period_freq,
+    min_energy_under_period_freq_batch,
     min_energy_under_period_freq_reference,
     min_energy_under_period_reference,
     min_period_under_power,
@@ -100,6 +101,41 @@ def test_min_energy_dp_matches_reference(seed, n, sr, b, l, ladder, stretch):
         # same objective value through the accounting layer
         assert energy(chain, fast, power, period=p_max) == \
             energy(chain, ref, power, period=p_max)
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 6),
+    sr=st.sampled_from([0.0, 0.25, 0.5, 1.0]),
+    b=st.integers(0, 4),
+    l=st.integers(0, 4),
+    ladder=st.sampled_from(LADDERS),
+)
+def test_min_energy_dp_batch_matches_scalar(seed, n, sr, b, l, ladder):
+    """The batched refinement DP == S independent scalar DP calls, bit
+    for bit — including guard slots (inf / non-positive bounds) and
+    shared-CandidateTable reuse."""
+    chain = _chain(seed, n, sr)
+    power = _model(ladder)
+    if b + l == 0:
+        base = 100.0
+    else:
+        opt = herad(chain, b, l)
+        base = opt.period(chain) if not opt.is_empty() else 50.0
+    p_maxes = [base * s for s in (0.4, 0.8, 1.0, 1.0, 1.7, 3.0)] \
+        + [math.inf, 0.0, -2.0]
+    batch = min_energy_under_period_freq_batch(chain, b, l, p_maxes, power)
+    assert len(batch) == len(p_maxes)
+    cand = CandidateTable.build(chain, power)
+    for p_max, fast in zip(p_maxes, batch):
+        ref = min_energy_under_period_freq(chain, b, l, p_max, power,
+                                           candidates=cand)
+        assert fast == ref  # stages, replicas, types, frequencies — exact
+        if not fast.is_empty():
+            assert energy(chain, fast, power, period=p_max) == \
+                energy(chain, ref, power, period=p_max)
+    assert min_energy_under_period_freq_batch(chain, b, l, [], power) == []
 
 
 @settings(deadline=None, max_examples=40)
@@ -274,6 +310,28 @@ def test_dvbs2_sweeps_and_dp_bit_identical():
             assert min_energy_under_period_freq(chain, b, l, p_max, power) \
                 == min_energy_under_period_freq_reference(
                     chain, b, l, p_max, power)
+
+
+def test_dvbs2_batch_dp_bit_identical():
+    """Batched refinement DP == scalar DP on the real DVB-S2 tables:
+    the exact bound vector a frontier refinement would issue, plus guard
+    slots, answered in one shared budget volume."""
+    from repro.configs.dvbs2 import RESOURCES, dvbs2_chain, platform_power
+
+    for plat in RESOURCES:
+        chain = dvbs2_chain(plat)
+        power = platform_power(plat)
+        b, l = (4, 3)
+        periods = [pt.period
+                   for pt in pareto_frontier(chain, b, l, power,
+                                             refine=False)]
+        p_maxes = periods + [math.inf, 0.0]
+        batch = min_energy_under_period_freq_batch(
+            chain, b, l, p_maxes, power)
+        cand = CandidateTable.build(chain, power)
+        for p_max, fast in zip(p_maxes, batch):
+            assert fast == min_energy_under_period_freq(
+                chain, b, l, p_max, power, candidates=cand)
 
 
 def test_empty_and_infeasible_guards_match():

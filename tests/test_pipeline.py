@@ -1,10 +1,15 @@
 """Pipeline planner + streaming runtime: schedule validity, throughput,
-straggler mitigation (work stealing), elastic re-planning."""
+straggler mitigation (work stealing), elastic re-planning, live-handoff
+rebuild delivery guarantees (both worker backends), and exactly-once
+drop accounting across mid-run rebuilds."""
+import itertools
+import threading
 import time
 
 import pytest
 
-from repro.core import BIG, LITTLE
+from _hyp import given, settings, st
+from repro.core import BIG, LITTLE, TaskChain, herad
 from repro.models.config import get_config, get_smoke_config
 from repro.pipeline import (
     HeterogeneousSystem,
@@ -13,6 +18,18 @@ from repro.pipeline import (
     model_chain,
     plan_pipeline,
 )
+
+
+def _toy_plan(b: int, l: int):
+    """A tiny real plan (two replicable tasks) for rebuild tests."""
+    ch = TaskChain([2.0, 2.0], [4.0, 4.0], [True, True])
+
+    class P:
+        solution = herad(ch, b, l)
+        chain = ch
+
+    assert not P.solution.is_empty()
+    return P
 
 
 def test_planner_budgets_and_period():
@@ -154,3 +171,85 @@ def test_runtime_reports_queue_wait_for_bottleneck_stage():
     # bottleneck's period and are consumed immediately
     assert mid > 10 * max(out, 1e-9)
     assert mid > 0.05
+
+
+# ------------------------------------------------ live handoff / rebuild
+def _handoff_roundtrip(executor: str, rebuild_gaps_ms, n_frames: int = 60):
+    """Stream frames while rebuilding at the given instants; assert the
+    sink saw every frame exactly once, in order, on either backend."""
+    plan_a, plan_b = _toy_plan(2, 0), _toy_plan(1, 1)
+
+    def builder(s, e):
+        def fn(x):
+            time.sleep(0.001)
+            return x * 3 + 1
+        return fn
+
+    rt = StreamingPipelineRuntime.from_plan(
+        plan_a, builder, queue_depth=4, executor=executor).start()
+    box = {}
+
+    def go():
+        box["res"] = rt.run(list(range(n_frames)), timeout_s=60.0)
+
+    th = threading.Thread(target=go)
+    th.start()
+    plans = itertools.cycle([plan_b, plan_a])
+    for gap in rebuild_gaps_ms:
+        time.sleep(gap / 1000.0)
+        rt.rebuild(next(plans))  # handoff: traffic keeps flowing
+    th.join(120.0)
+    rt.stop()
+    res = box["res"]
+    n_stages = len(plan_a.solution.stages)
+    assert res["frames_dropped"] == 0
+    assert res["seq_ids"] == sorted(res["seq_ids"])          # ordered
+    assert len(set(res["seq_ids"])) == n_frames              # exactly once
+    want = list(range(n_frames))
+    for _ in range(n_stages):
+        want = [x * 3 + 1 for x in want]
+    assert res["outputs"] == want
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_live_handoff_exactly_once(executor):
+    _handoff_roundtrip(executor, [5, 12, 7])
+
+
+@settings(deadline=None, max_examples=6)
+@given(
+    executor=st.sampled_from(["thread", "process"]),
+    gaps=st.lists(st.integers(1, 30), min_size=1, max_size=3),
+)
+def test_live_handoff_exactly_once_property(executor, gaps):
+    """Randomized rebuild instants: the fence/handoff protocol preserves
+    sink ordering and exactly-once delivery on both worker backends."""
+    _handoff_roundtrip(executor, gaps, n_frames=40)
+
+
+def test_timeout_drops_counted_exactly_once_across_rebuild():
+    """Frames in flight when ``run(timeout_s=...)`` expires are dropped
+    by THAT run only: after a mid-run rebuild releases them, the next
+    run's drain must admit only its own sequence range — stragglers
+    neither surface as phantom outputs nor re-count as drops."""
+    plan = _toy_plan(2, 0)
+    gate = threading.Event()
+
+    def builder(s, e):
+        def fn(x):
+            gate.wait(10.0)
+            return x
+        return fn
+
+    rt = StreamingPipelineRuntime.from_plan(plan, builder,
+                                            queue_depth=8).start()
+    res1 = rt.run(list(range(6)), timeout_s=0.3)
+    assert res1["frames_dropped"] == 6          # all wedged behind the gate
+    assert res1["outputs"] == []
+    rt.rebuild(_toy_plan(1, 1))                 # old set retires live
+    gate.set()                                  # stragglers surface late
+    res2 = rt.run(list(range(4)), timeout_s=30.0)
+    rt.stop()
+    assert res2["outputs"] == list(range(4))    # no batch-1 leakage
+    assert res2["frames_dropped"] == 0          # counted once, in res1
+    assert res2["seq_ids"] == [6, 7, 8, 9]      # global counter advanced

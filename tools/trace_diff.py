@@ -71,6 +71,7 @@ def summarize(report) -> dict[str, float]:
         "p99_period_s": report.p99_period_s,
         "rebuild_count": float(report.rebuild_count),
         "rebuild_stall_s": report.rebuild_stall_s,
+        "rebuild_overlap_s": report.rebuild_overlap_s,
         "decisions": float(len(report.decisions)),
         "over_cap_windows": float(report.over_cap_windows),
         "over_cap_power_samples": float(report.over_cap_power_samples),
