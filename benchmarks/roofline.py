@@ -18,16 +18,20 @@ and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
 
 Train cells: total = 8 x grad-variant + optimizer-variant (the step has 8
 microbatches). Decode/prefill cells: the unrolled variant is exact.
+
+Also reports analytic per-kernel-variant roofline terms
+(``print_variant_roofline``): structural MXU/VPU/HBM counts for each
+selectable implementation in ``repro.kernels.registry``, as a sanity
+anchor for the measured multipliers ``repro.control.calibrate`` fits
+onto the scheduling variant axis.
 """
 from __future__ import annotations
 
 import json
-import os
 import sys
 from pathlib import Path
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
 from repro.models.config import SHAPES, get_config  # noqa: E402
@@ -223,8 +227,136 @@ def markdown_table(mesh: str = "pod16x16") -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------- per-kernel variants
+# VPU throughput anchor: vector lanes issue far below MXU peak on v5e.
+# The absolute figure is coarse; the per-variant RATIOS are the anchor —
+# they use the same constant on both sides.
+VPU_OPS = PEAK_FLOPS_BF16 / 64.0
+
+
+def _flash_variant_counts(b, h, sq, skv, d, bk, dtype_bytes):
+    """Structural MXU/VPU/HBM counts per flash-attention implementation.
+
+    All three compute the same function; they differ in how often the
+    score matrix is built (MXU), how much softmax bookkeeping runs on
+    the VPU, and how often K/V cross HBM. Fused-execution lower bounds:
+
+      base    — online softmax: one QK + one PV pass; every kv chunk
+                rescales the (sq, d) accumulator and the running sum
+                (the exp-correction traffic on the VPU); K/V read once.
+      chunked — two-pass lazy softmax (Rabe & Staats): the score matrix
+                is built TWICE (pass 1 for the final max, pass 2 for the
+                exp-sum), so MXU work is ~1.5x — but the accumulator is
+                never rescaled, dropping the per-chunk VPU correction;
+                K is read twice.
+      xla     — online softmax via lax.scan: base's counts, plus the
+                per-chunk fp32 probability tensors that cross HLO
+                boundaries when XLA does not fuse the chain (an upper
+                bound on spill traffic).
+    """
+    qk = 2.0 * b * h * sq * skv * d
+    pv = 2.0 * b * h * sq * skv * d
+    nk = max(skv // bk, 1)
+    exp_pass = b * h * sq * skv           # exp over every masked score
+    rescale = b * h * sq * (d + 2) * nk   # acc/l/m corrections per chunk
+    io_q = b * h * sq * d * dtype_bytes
+    io_kv = b * h * skv * d * dtype_bytes
+    io_o = b * h * sq * d * dtype_bytes
+    spill = 2.0 * b * h * sq * skv * 4.0  # fp32 p write+read per chunk
+    return {
+        "base": {"mxu": qk + pv, "vpu": exp_pass + rescale,
+                 "bytes": io_q + 2 * io_kv + io_o},
+        "chunked": {"mxu": 2 * qk + pv, "vpu": exp_pass,
+                    "bytes": io_q + 3 * io_kv + io_o},
+        "xla": {"mxu": qk + pv, "vpu": exp_pass + rescale,
+                "bytes": io_q + 2 * io_kv + io_o + spill},
+    }
+
+
+def _ssd_variant_counts(b, l, h, p, n, chunk, dtype_bytes):
+    """Structural counts per SSD-scan implementation.
+
+    base       — Pallas chunked scan: within-chunk parallel form plus
+                 one inter-chunk state pass; states stay in VMEM.
+      blocked  — pure-jnp block decomposition: the same math with the
+                 per-chunk decay/cumsum tensors materialized through HBM.
+      sequential — lax.scan over tokens: minimal arithmetic but the
+                 (h, p, n) state crosses HBM every token — the classic
+                 bandwidth wall that makes it the slow reference.
+    """
+    core = 6.0 * b * l * h * p * n        # B-expand + update + C-contract
+    io = dtype_bytes * (2.0 * b * l * h * p + 2.0 * b * l * n) \
+        + 4.0 * b * l * h                 # x/y + B/C + dt
+    state = 4.0 * b * h * p * n           # one fp32 state snapshot
+    n_chunks = max(l // chunk, 1)
+    return {
+        "base": {"mxu": core, "vpu": b * l * h * (p + n),
+                 "bytes": io + state * n_chunks},
+        "blocked": {"mxu": 1.5 * core, "vpu": 2.0 * b * l * h * (p + n),
+                    "bytes": io + 3.0 * state * n_chunks},
+        "sequential": {"mxu": core, "vpu": b * l * h * (p + n),
+                       "bytes": io + 2.0 * state * l},
+    }
+
+
+def variant_roofline(*, b=1, h=16, sq=4096, skv=4096, d=128, bk=128,
+                     ssd_l=4096, ssd_p=64, ssd_n=128, ssd_chunk=64,
+                     dtype_bytes=2) -> list[dict]:
+    """Per-(family, variant) roofline terms on v5e constants.
+
+    Returns one row per selectable implementation with its MXU / VPU /
+    HBM time terms, the dominant bound, and each term's ratio against
+    the family's base implementation. The ratios are the analytic
+    sanity anchor for measured multipliers (e.g. the DVB-S2 preset's
+    chunked (big 1.30, little 0.82)): a bandwidth-bound core should see
+    roughly the bytes ratio, a vector-bound core the vpu ratio — a
+    fitted multiplier far outside [min, max] of the term ratios points
+    at a calibration problem, not a real implementation gap.
+    """
+    families = {
+        "flash_attention": _flash_variant_counts(b, h, sq, skv, d, bk,
+                                                 dtype_bytes),
+        "ssd_scan": _ssd_variant_counts(b, ssd_l, h, ssd_p, ssd_n,
+                                        ssd_chunk, dtype_bytes),
+    }
+    rows = []
+    for family, counts in families.items():
+        base = counts["base"]
+        for variant, c in counts.items():
+            terms = {"mxu": c["mxu"] / PEAK_FLOPS_BF16,
+                     "vpu": c["vpu"] / VPU_OPS,
+                     "memory": c["bytes"] / HBM_BW}
+            ratios = {k: c[k2] / base[k2] for k, k2 in
+                      (("mxu", "mxu"), ("vpu", "vpu"),
+                       ("memory", "bytes"))}
+            rows.append({
+                "family": family, "variant": variant,
+                "mxu_s": terms["mxu"], "vpu_s": terms["vpu"],
+                "memory_s": terms["memory"],
+                "dominant": max(terms, key=terms.get),
+                "mxu_vs_base": ratios["mxu"],
+                "vpu_vs_base": ratios["vpu"],
+                "memory_vs_base": ratios["memory"],
+            })
+    return rows
+
+
+def print_variant_roofline() -> None:
+    print("# variant-roofline: analytic per-implementation terms "
+          "(v5e constants); *_vs_base ratios anchor calibrated "
+          "scheduling multipliers")
+    print("variant_roofline,family,variant,mxu_s,vpu_s,memory_s,"
+          "dominant,mxu_vs_base,vpu_vs_base,memory_vs_base")
+    for r in variant_roofline():
+        print(f"variant_roofline,{r['family']},{r['variant']},"
+              f"{r['mxu_s']:.4g},{r['vpu_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['dominant']},{r['mxu_vs_base']:.3f},"
+              f"{r['vpu_vs_base']:.3f},{r['memory_vs_base']:.3f}")
+
+
 if __name__ == "__main__":
     print_roofline()
+    print_variant_roofline()
 
 
 def write_markdown() -> None:

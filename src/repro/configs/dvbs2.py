@@ -83,6 +83,25 @@ POWER = {
     "x7": POWER_INTEL_ULTRA9_185H,
 }
 
+# Explicit big/little core-id layout per platform, for the runtime's
+# process-worker affinity (repro.pipeline.runtime, ``core_map=``). The
+# default low-half-big policy happens to match the M1 Ultra (P-cores
+# numbered first), but the X7 Ti's Ultra 9 185H exposes its 6 P-cores as
+# 12 hyperthread siblings (0-11) ahead of 8 E-cores (12-19) — an uneven
+# split the halves heuristic gets wrong, hence the override.
+CORE_MAP = {
+    "mac": {"big": tuple(range(0, 16)), "little": tuple(range(16, 20))},
+    "x7": {"big": tuple(range(0, 12)), "little": tuple(range(12, 20))},
+}
+
+
+def core_map(platform: str) -> dict:
+    """Explicit affinity pools for 'mac' or 'x7' (see ``CORE_MAP``)."""
+    try:
+        return {cls: list(ids) for cls, ids in CORE_MAP[platform].items()}
+    except KeyError:
+        raise ValueError(f"unknown platform {platform!r}") from None
+
 
 def platform_power(platform: str) -> PowerModel:
     """Power model preset for 'mac' or 'x7'."""
@@ -90,6 +109,32 @@ def platform_power(platform: str) -> PowerModel:
         return POWER[platform]
     except KeyError:
         raise ValueError(f"unknown platform {platform!r}") from None
+
+
+#: Kernel-variant preset for the DVB-S2 chain: the memory-efficient
+#: "chunked" implementation point (two-pass lazy softmax shape — see
+#: repro.kernels.flash_attention.chunked). Multipliers are per-core-type
+#: weight factors vs the base implementation, representative of the
+#: bandwidth-vs-vector-work trade that family exhibits: big cores pay
+#: the second K read (bandwidth-bound, x1.30), little cores bank the
+#: dropped accumulator-rescale vector work (x0.82). Exemplar calibration
+#: values for examples/tests — production plans refit them from capture
+#: windows via repro.control.calibrate.fit_variant_multipliers.
+VARIANT_MULTIPLIERS = {"chunked": (1.30, 0.82)}
+
+
+def variant_registry(platform: str = "mac"):
+    """A ``VariantRegistry`` covering every DVB-S2 task with the
+    ``VARIANT_MULTIPLIERS`` preset (same task names on both platforms).
+    ``variant_registry(platform).spec_for(dvbs2_chain(platform))`` is the
+    resolved spec the 4-axis planners consume."""
+    from repro.core.variants import VariantRegistry
+
+    reg = VariantRegistry()
+    for name, (big, little) in VARIANT_MULTIPLIERS.items():
+        for task in dvbs2_chain(platform).names:
+            reg.register(task, name, big=big, little=little)
+    return reg
 
 
 def dvbs2_chain(platform: str = "mac") -> TaskChain:

@@ -33,8 +33,11 @@ from .budget import (  # noqa: F401
 )
 from .calibrate import (  # noqa: F401
     TraceSample,
+    VariantObservation,
     fit_power_model,
     fit_report,
+    fit_variant_multipliers,
+    observations_from_run,
     sample_from_run,
     samples_from_capture,
     stage_info_from_plan,

@@ -109,7 +109,7 @@ def sample_from_run(stages, stats: dict) -> TraceSample:
     return TraceSample(alloc, busy, stats["energy_j"])
 
 
-def samples_from_capture(windows: Iterable) -> list[TraceSample]:
+def samples_from_capture(windows: Iterable, by_variant: bool = False):
     """Convert aligned capture windows into :class:`TraceSample` rows.
 
     ``windows`` are :class:`repro.obs.power.CaptureWindow` records (duck-
@@ -119,22 +119,34 @@ def samples_from_capture(windows: Iterable) -> list[TraceSample]:
     aligned against a capture). Windows with no allocation at all (e.g.
     a capture interval that overlapped no trace activity) carry no
     information for the fit and are skipped.
+
+    ``by_variant=True`` keys the result by the windows' kernel-variant
+    annotation instead — ``{variant: [TraceSample, ...]}`` — so a
+    capture that sweeps implementations (one plan generation per
+    variant) yields one fitting set per variant; windows without an
+    annotation land under ``"base"``.
     """
-    out = []
+    out: list[TraceSample] = []
+    grouped: dict[str, list[TraceSample]] = {}
     for w in windows:
         alloc = {v: s for v, s in w.alloc_s.items() if s > 0.0}
         if not alloc:
             continue
         busy = {k: s for k, s in w.busy_s.items() if s > 0.0}
-        out.append(TraceSample(alloc, busy, max(float(w.energy_j), 0.0)))
-    return out
+        sample = TraceSample(alloc, busy, max(float(w.energy_j), 0.0))
+        if by_variant:
+            grouped.setdefault(getattr(w, "variant", "base") or "base",
+                               []).append(sample)
+        else:
+            out.append(sample)
+    return grouped if by_variant else out
 
 
 def stage_info_from_plan(plan) -> dict[str, dict]:
     """Describe a plan's stages for trace/capture alignment.
 
-    Returns ``{stage_name: {"ctype", "freq", "cores"}}`` keyed by the
-    runtime's stage naming (``s{start}-{end}``), the mapping
+    Returns ``{stage_name: {"ctype", "freq", "cores", "variant"}}`` keyed
+    by the runtime's stage naming (``s{start}-{end}``), the mapping
     ``repro.obs.power.capture_windows_from_trace`` and
     ``repro.obs.report.attribute_energy`` consume. ``plan`` is anything
     with ``.stages`` of Stage/FreqStage records (a ``Solution`` /
@@ -145,9 +157,104 @@ def stage_info_from_plan(plan) -> dict[str, dict]:
             "ctype": st.ctype,
             "freq": float(getattr(st, "freq", 1.0)),
             "cores": int(st.cores),
+            "variant": getattr(st, "variant", "base"),
         }
         for st in plan.stages
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantObservation:
+    """Measured cost of one (kernel variant, core type) combination.
+
+    ``busy_s`` is total busy core-seconds over the observation window(s)
+    at DVFS level ``freq``; ``frames`` the frames processed. The nominal
+    per-frame work is ``busy_s * freq / frames`` (a stage at level f
+    spends w/f wall seconds per frame), which is what multiplier fitting
+    compares across variants."""
+
+    variant: str
+    ctype: str
+    busy_s: float
+    frames: int
+    freq: float = 1.0
+
+    def __post_init__(self):
+        if self.busy_s < 0 or self.frames <= 0 or self.freq <= 0:
+            raise ValueError(
+                "need busy_s >= 0, frames > 0, freq > 0")
+
+    def work_per_frame(self) -> float:
+        """Per-frame busy seconds normalized to the nominal clock."""
+        return self.busy_s * self.freq / self.frames
+
+
+def observations_from_run(stages, stats: dict) -> list[VariantObservation]:
+    """Per-(variant, core type) cost observations from a runtime run.
+
+    ``stages`` are the runtime's StageSpecs (their ``variant``,
+    ``device_class`` and ``freq`` attribute the busy time), ``stats`` the
+    ``StreamingPipelineRuntime.run`` result — ``busy_s`` and
+    ``replica_frames`` are summed per stage. One observation per
+    (variant, ctype, freq) triple present in the run; stages that
+    processed no frame are skipped."""
+    acc: dict[tuple[str, str, float], list[float]] = {}
+    busy_by_stage: dict[str, float] = {}
+    frames_by_stage: dict[str, int] = {}
+    for (name, _ri), s in stats.get("busy_s", {}).items():
+        busy_by_stage[name] = busy_by_stage.get(name, 0.0) + s
+    for (name, _ri), c in stats.get("replica_frames", {}).items():
+        frames_by_stage[name] = frames_by_stage.get(name, 0) + c
+    for spec in stages:
+        frames = frames_by_stage.get(spec.name, 0)
+        if frames <= 0:
+            continue
+        key = (getattr(spec, "variant", "base"),
+               _CLASS_TO_CTYPE[spec.device_class],
+               float(getattr(spec, "freq", 1.0)) or 1.0)
+        cur = acc.setdefault(key, [0.0, 0])
+        cur[0] += busy_by_stage.get(spec.name, 0.0)
+        cur[1] += frames
+    return [
+        VariantObservation(variant=k, ctype=v, busy_s=b, frames=n, freq=f)
+        for (k, v, f), (b, n) in acc.items() if n > 0
+    ]
+
+
+def fit_variant_multipliers(
+    observations: Iterable[VariantObservation],
+) -> dict[str, dict[str, float]]:
+    """Measured per-variant per-core-type weight multipliers.
+
+    For each variant ``k`` and core type ``v`` with both a variant and a
+    base observation, the multiplier is the ratio of nominal per-frame
+    work: ``m_k(v) = work_k(v) / work_base(v)`` — the *measured* figure
+    the scheduling model's ``w * m_k / f`` composition calls for
+    (multiple observations of the same pair are pooled busy/frames-
+    weighted). Returns ``{variant: {"B": m, "L": m}}`` for the non-base
+    variants; core types never observed under a variant are omitted
+    (callers keep the previous — or unit — multiplier there). Raises if
+    a variant was observed on a core type the base never ran on: a ratio
+    against nothing is not a measurement."""
+    pooled: dict[tuple[str, str], list[float]] = {}
+    for ob in observations:
+        cur = pooled.setdefault((ob.variant, ob.ctype), [0.0, 0])
+        cur[0] += ob.busy_s * ob.freq
+        cur[1] += ob.frames
+    work = {k: b / n for k, (b, n) in pooled.items() if n > 0}
+    out: dict[str, dict[str, float]] = {}
+    for (variant, ctype), w in work.items():
+        if variant == "base":
+            continue
+        base = work.get(("base", ctype))
+        if base is None:
+            raise ValueError(
+                f"variant {variant!r} observed on type {ctype!r} without "
+                "a base observation to ratio against")
+        if base <= 0.0 or w <= 0.0:
+            continue  # zero-cost windows carry no ratio information
+        out.setdefault(variant, {})[ctype] = w / base
+    return out
 
 
 def synthesize_samples(

@@ -110,6 +110,7 @@ import numpy as np
 
 from repro.core.chain import BIG, LITTLE, Solution, TaskChain
 from repro.core.dvfs import FreqSolution
+from repro.core.variants import VariantSpec
 from repro.energy.account import energy_report
 from repro.energy.model import PowerModel
 from repro.energy.pareto import (
@@ -119,6 +120,7 @@ from repro.energy.pareto import (
     min_energy_meeting_deadline,
     min_period_under_power,
     pareto_frontier,
+    variant_frontier,
 )
 
 from .budget import PowerBudget
@@ -246,6 +248,7 @@ class Governor:
         stage_recalibration: bool = True,
         dvfs: bool = False,
         freq_levels=None,
+        variants: VariantSpec | None = None,
         slo_period: float | None = None,
         slo_tolerance: float = 0.1,
         tracer=None,
@@ -277,6 +280,13 @@ class Governor:
         self.lookahead_s = lookahead_s
         self.stage_recalibration = stage_recalibration
         self.dvfs = dvfs
+        # kernel-variant axis: a VariantSpec plans off the 4-axis
+        # variant_frontier (implies the DVFS grid); drift recalibration
+        # then rescales the ACTIVE variant's multipliers for non-base
+        # stages instead of the shared base weights
+        self.variants = variants
+        if variants is not None:
+            self.dvfs = True
         self.freq_levels = freq_levels
         self.slo_period = slo_period
         self.slo_tolerance = slo_tolerance
@@ -363,8 +373,13 @@ class Governor:
                 self._candidates = CandidateTable.build(
                     self.chain, self.power,
                     (self.freq_levels if self.freq_levels is not None
-                     else self.power.freq_levels) if self.dvfs else (1.0,))
-            if self.dvfs:
+                     else self.power.freq_levels) if self.dvfs else (1.0,),
+                    variants=self.variants)
+            if self.variants is not None:
+                self._frontier = variant_frontier(
+                    self.chain, self.b, self.l, self.power, self.variants,
+                    self.freq_levels, candidates=self._candidates)
+            elif self.dvfs:
                 self._frontier = dvfs_frontier(
                     self.chain, self.b, self.l, self.power, self.freq_levels,
                     candidates=self._candidates)
@@ -601,12 +616,15 @@ class Governor:
         return abs(measured_period - predicted) / predicted \
             > self.drift_tolerance
 
-    def _reweigh(self, ratios):
-        """Swap in a reweighted chain (scalar or per-task ``ratios``).
+    def _reweigh(self, ratios, variants: VariantSpec | None = None):
+        """Swap in a reweighted chain (scalar or per-task ``ratios``),
+        optionally together with a refit variant spec (the active-variant
+        drift rescale).
 
         The cached candidate table survives the recalibration: only its
         weight-derived arrays are rebuilt on the rescaled chain — ladders,
-        power constants, and replicability structure carry over."""
+        power constants, the variant axis, and replicability structure
+        carry over."""
         self.task_scales = self.task_scales * ratios
         self.chain = TaskChain(
             w_big=self.chain.w[BIG] * ratios,
@@ -614,8 +632,11 @@ class Governor:
             replicable=self.chain.replicable,
             names=self.chain.names,
         )
+        if variants is not None:
+            self.variants = variants
         if self._candidates is not None:
-            self._candidates = self._candidates.rescale(self.chain)
+            self._candidates = self._candidates.rescale(self.chain,
+                                                        self.variants)
         self._frontier = None
         self._split_cache = {}
 
@@ -631,26 +652,53 @@ class Governor:
         Uses the same stage naming as the runtime's StageSpecs, so the
         measured map keys straight off ``run()`` stats. Returns the event
         detail, or None when no stage carries a usable measurement (the
-        caller then falls back to the uniform model)."""
+        caller then falls back to the uniform model).
+
+        Variant plans rescale the *active* variant only: a stage running
+        a non-base kernel variant attributes its drift to that variant's
+        multipliers on its own core type
+        (:meth:`~repro.core.variants.VariantSpec.with_multipliers`), not
+        to the shared base weights — a slow chunked kernel must not slow
+        the model's idea of every other implementation. Base-variant
+        stages rescale the chain weights exactly as before."""
         ratios = np.ones(self.chain.n)
+        # vname -> ctype -> per-task multiplier-ratio array
+        vupdates: dict[str, dict[str, np.ndarray]] = {}
         hits: list[tuple[str, float]] = []
         for st in self._plan.point.solution.stages:
             measured = obs.stage_busy.get(f"s{st.start}-{st.end}")
             if measured is None or measured <= 0:
                 continue
-            predicted = self.chain.stage_sum(st.start, st.end, st.ctype) \
+            variant = getattr(st, "variant", "base")
+            on_variant = self.variants is not None and variant != "base"
+            pred_chain = self.variants.scaled(self.chain, variant) \
+                if on_variant else self.chain
+            predicted = pred_chain.stage_sum(st.start, st.end, st.ctype) \
                 / getattr(st, "freq", 1.0)
             if predicted <= 0:
                 continue
             ratio = measured / predicted
-            ratios[st.start:st.end + 1] = ratio
+            if on_variant:
+                arr = vupdates.setdefault(variant, {}).setdefault(
+                    st.ctype, np.ones(self.chain.n))
+                arr[st.start:st.end + 1] = ratio
+            else:
+                ratios[st.start:st.end + 1] = ratio
             hits.append((f"s{st.start}-{st.end}", ratio))
         if not hits:
             return None
-        self._reweigh(ratios)
+        spec = self.variants
+        for vname, per_type in vupdates.items():
+            ki = spec.index(vname)
+            spec = spec.with_multipliers(
+                vname,
+                spec.mult[BIG][ki] * per_type.get(BIG, 1.0),
+                spec.mult[LITTLE][ki] * per_type.get(LITTLE, 1.0))
+        self._reweigh(ratios, variants=spec if vupdates else None)
         worst = max(hits, key=lambda h: abs(h[1] - 1.0))
+        refit = f" ({len(vupdates)} variant(s) refit)" if vupdates else ""
         return (f"per-stage recalibration over {len(hits)} stages; "
-                f"worst {worst[0]} x{worst[1]:.3f}")
+                f"worst {worst[0]} x{worst[1]:.3f}{refit}")
 
     def _type_split_watts(self, point: ParetoPoint) -> dict[str, float]:
         """A frontier point's predicted draw split per core type, from

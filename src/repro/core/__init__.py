@@ -25,6 +25,11 @@ Strategies (all take ``(chain, b, l)`` and return a
   frequency level) per stage, lexicographically optimizing (period,
   energy); returns a :class:`~repro.core.dvfs.FreqSolution`. Defined in
   ``repro.energy.pareto`` on top of :mod:`repro.core.dvfs`.
+- ``variant_herad``: the 4-axis strategy — (core type, replica count,
+  frequency level, kernel variant) per stage over a
+  :class:`~repro.core.variants.VariantSpec`; reduces bit-identically to
+  ``freqherad`` for single-variant specs. Defined in
+  ``repro.energy.pareto`` on top of :mod:`repro.core.variants`.
 """
 from .chain import (  # noqa: F401
     BIG,
@@ -60,7 +65,15 @@ from .dvfs import (  # noqa: F401
     annotate_frequency,
     dvfs_tables,
     extract_dvfs_solution,
+    extract_variant_solution,
     scale_chain,
+    variant_tables,
+)
+from .variants import (  # noqa: F401
+    DEFAULT_VARIANT,
+    TaskVariant,
+    VariantRegistry,
+    VariantSpec,
 )
 from .brute import brute_force  # noqa: F401
 
@@ -81,6 +94,15 @@ def _freqherad(c, b, l):
     return freqherad(c, b, l)
 
 
+def _variant_herad(c, b, l):
+    # 4-axis strategy with no registry in scope: runs over the trivial
+    # (base-only) spec, which is exactly freqherad. Callers with real
+    # variants invoke repro.energy.pareto.variant_herad directly.
+    from repro.energy.pareto import variant_herad
+
+    return variant_herad(c, b, l)
+
+
 STRATEGIES = {
     "herad": lambda c, b, l: herad(c, b, l),
     "herad_ref": lambda c, b, l: herad_reference(c, b, l),
@@ -94,4 +116,7 @@ STRATEGIES = {
     # DVFS-aware: per-stage (type, replicas, frequency), lexicographic
     # (period, energy) — returns a FreqSolution
     "freqherad": _freqherad,
+    # 4-axis: (type, replicas, frequency, kernel variant); equals
+    # freqherad under the trivial base-only variant spec
+    "variant_herad": _variant_herad,
 }

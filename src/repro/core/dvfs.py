@@ -39,10 +39,12 @@ from typing import Iterable, Mapping
 
 from .chain import BIG, LITTLE, Solution, Stage, TaskChain
 from .herad import _Matrix, extract_solution, herad_tables
+from .variants import DEFAULT_VARIANT, VariantSpec
 
 
 def scale_chain(chain: TaskChain, f_big: float = 1.0,
-                f_little: float = 1.0) -> TaskChain:
+                f_little: float = 1.0, variant: str | None = None,
+                variants: VariantSpec | None = None) -> TaskChain:
     """DVFS view of a chain: task latencies scale as ``1/f`` per core type.
 
     Returns ``chain`` itself when both frequencies are nominal (1.0), so
@@ -50,9 +52,21 @@ def scale_chain(chain: TaskChain, f_big: float = 1.0,
     positive; arbitrarily small values are allowed (weights grow as 1/f
     but stay finite and positive, so the scaled chain is still a valid
     ``TaskChain``).
+
+    When ``variant``/``variants`` are given the kernel-variant multipliers
+    are applied first and the 1/f scaling second, composing the two axes:
+    ``w' = (w * m_k) / f``. The base variant (and any identity variant)
+    leaves the chain untouched before the frequency scaling, so the pure
+    DVFS path is bit-identical to the two-argument call.
     """
     if f_big <= 0 or f_little <= 0:
         raise ValueError("frequencies must be positive")
+    if variant is not None and variant != DEFAULT_VARIANT:
+        if variants is None:
+            raise ValueError("variant given without a VariantSpec")
+        chain = variants.scaled(chain, variant)
+    elif variant is not None and variants is not None:
+        chain = variants.scaled(chain, variant)  # validates the name
     if f_big == 1.0 and f_little == 1.0:
         return chain
     return TaskChain(
@@ -65,26 +79,35 @@ def scale_chain(chain: TaskChain, f_big: float = 1.0,
 
 @dataclasses.dataclass(frozen=True)
 class FreqStage:
-    """One pipeline stage with a DVFS level: tasks [start, end] on
-    ``cores`` cores of ``ctype`` clocked at normalized frequency ``freq``."""
+    """One pipeline stage with a DVFS level and a kernel variant: tasks
+    [start, end] on ``cores`` cores of ``ctype`` clocked at normalized
+    frequency ``freq`` running implementation ``variant``."""
 
     start: int
     end: int
     cores: int
     ctype: str
     freq: float = 1.0
+    variant: str = DEFAULT_VARIANT
 
     def n_tasks(self) -> int:
         return self.end - self.start + 1
 
-    def weight(self, chain: TaskChain) -> float:
-        """Stage weight at this stage's frequency: w(s, e, r, v) / f."""
-        return chain.weight(self.start, self.end, self.cores, self.ctype) \
+    def weight(self, chain: TaskChain,
+               variants: VariantSpec | None = None) -> float:
+        """Stage weight at this stage's frequency and variant:
+        w(s, e, r, v) * m_k / f. Without a spec the variant annotation is
+        ignored (multiplier 1, the pre-variant behaviour)."""
+        ch = chain if variants is None else variants.scaled(chain, self.variant)
+        return ch.weight(self.start, self.end, self.cores, self.ctype) \
             / self.freq
 
-    def work(self, chain: TaskChain) -> float:
-        """Total per-frame busy time of the stage: sum(w) / f (all replicas)."""
-        return chain.stage_sum(self.start, self.end, self.ctype) / self.freq
+    def work(self, chain: TaskChain,
+             variants: VariantSpec | None = None) -> float:
+        """Total per-frame busy time of the stage: sum(w * m_k) / f (all
+        replicas)."""
+        ch = chain if variants is None else variants.scaled(chain, self.variant)
+        return ch.stage_sum(self.start, self.end, self.ctype) / self.freq
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,19 +117,27 @@ class FreqSolution:
     The DVFS analogue of :class:`repro.core.Solution`; all methods mirror
     it with latencies divided by the per-stage frequency. Periods are in
     the chain's time unit (µs for the DVB-S2 tables).
+
+    ``variants`` carries the resolved kernel-variant table the stage
+    ``variant`` names refer to; it is None for pre-variant solutions and
+    excluded from equality (stages already name their variants — the spec
+    only supplies the multipliers needed to *evaluate* them).
     """
 
     stages: tuple[FreqStage, ...]
+    variants: VariantSpec | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     # -------------------------------------------------------------- queries
     def is_empty(self) -> bool:
         return len(self.stages) == 0
 
     def period(self, chain: TaskChain) -> float:
-        """Max frequency-scaled stage weight (Eq. 2 with w -> w/f)."""
+        """Max frequency/variant-scaled stage weight (Eq. 2 with
+        w -> w * m_k / f)."""
         if self.is_empty():
             return math.inf
-        return max(st.weight(chain) for st in self.stages)
+        return max(st.weight(chain, self.variants) for st in self.stages)
 
     def cores_used(self, ctype: str) -> int:
         return sum(st.cores for st in self.stages if st.ctype == ctype)
@@ -139,6 +170,21 @@ class FreqSolution:
         """True iff every stage runs at the nominal frequency (1.0)."""
         return all(st.freq == 1.0 for st in self.stages)
 
+    def variant_profile(self) -> tuple[str, ...]:
+        """Per-stage kernel-variant names, in stage order."""
+        return tuple(st.variant for st in self.stages)
+
+    def variant_profile_str(self) -> str:
+        """Human/CSV form of the variant profile: "base" or e.g.
+        "base/chunked/base"."""
+        if self.is_base_variant():
+            return DEFAULT_VARIANT
+        return "/".join(self.variant_profile())
+
+    def is_base_variant(self) -> bool:
+        """True iff every stage runs its base implementation."""
+        return all(st.variant == DEFAULT_VARIANT for st in self.stages)
+
     def to_solution(self) -> Solution:
         """Drop the frequency annotation (stages keep cores and type)."""
         return Solution(tuple(
@@ -147,12 +193,15 @@ class FreqSolution:
 
     # --------------------------------------------------------- post-passes
     def merge_replicable(self, chain: TaskChain) -> "FreqSolution":
-        """Merge consecutive replicable stages on the same type AND level.
+        """Merge consecutive replicable stages on the same type AND level
+        AND variant.
 
         The merge invariance of ``Solution.merge_replicable`` only holds
-        when both stages run at the same frequency: then the combined
-        weight (w1 + w2) / (f * (r1 + r2)) <= max of the parts, and both
-        busy and idle energy are additive.
+        when both stages run at the same frequency and implementation:
+        then the combined weight (w1 + w2) * m_k / (f * (r1 + r2)) <= max
+        of the parts, and both busy and idle energy are additive. Across
+        different variants the combined stage would have to pick ONE
+        implementation for the union, which can raise the period.
         """
         if self.is_empty():
             return self
@@ -162,19 +211,23 @@ class FreqSolution:
             if (
                 st.ctype == last.ctype
                 and st.freq == last.freq
+                and st.variant == last.variant
                 and chain.is_rep(last.start, st.end)
             ):
                 merged[-1] = FreqStage(last.start, st.end,
-                                       last.cores + st.cores, st.ctype, st.freq)
+                                       last.cores + st.cores, st.ctype,
+                                       st.freq, st.variant)
             else:
                 merged.append(st)
-        return FreqSolution(tuple(merged))
+        return FreqSolution(tuple(merged), variants=self.variants)
 
     def describe(self, chain: TaskChain) -> str:
         if self.is_empty():
             return "<no solution>"
         parts = [
-            f"({st.n_tasks()},{st.cores}{st.ctype}@{st.freq:g})"
+            f"({st.n_tasks()},{st.cores}{st.ctype}@{st.freq:g}"
+            + ("" if st.variant == DEFAULT_VARIANT else f"#{st.variant}")
+            + ")"
             for st in self.stages
         ]
         b_used, l_used = self.core_usage()
@@ -230,21 +283,9 @@ def dvfs_tables(
     energy layer sweeps this (budget x budget x profile) cube to build
     DVFS Pareto frontiers.
     """
-    if isinstance(freq_levels, Mapping):
-        unknown = set(freq_levels) - {BIG, LITTLE}
-        if unknown:
-            raise ValueError(f"unknown core types in freq_levels: "
-                             f"{sorted(unknown)} (use {BIG!r}/{LITTLE!r})")
-        missing = {BIG, LITTLE} - set(freq_levels)
-        if missing:
-            # same contract as repro.energy.model.normalize_freq_levels:
-            # a partial mapping is a bug, not a request for nominal
-            raise ValueError(f"per-core-type freq_levels must cover both "
-                             f"types; missing {sorted(missing)}")
-        big_levels = _ladder(freq_levels[BIG])
-        little_levels = _ladder(freq_levels[LITTLE])
-    else:
-        big_levels = little_levels = _ladder(freq_levels)
+    # same contract as repro.energy.model.normalize_freq_levels: a partial
+    # per-type mapping is a bug, not a request for nominal
+    big_levels, little_levels = variant_grid_levels(freq_levels)
     # _ladder deduped both axes, so the cross product has no repeats
     profiles = [(fb, fl) for fb in big_levels for fl in little_levels]
     scaled_chains = [scale_chain(chain, fb, fl) for fb, fl in profiles]
@@ -268,3 +309,76 @@ def extract_dvfs_solution(
     if sol.is_empty():
         return EMPTY_FREQ_SOLUTION
     return annotate_frequency(sol, *profile)
+
+
+# --------------------------------------------- variant-indexed tables (4-axis)
+def variant_grid_levels(
+    freq_levels: Iterable[float] | Mapping[str, Iterable[float]],
+) -> tuple[list[float], list[float]]:
+    """The deduplicated ascending (big, little) ladders of a level spec —
+    the same normalization :func:`dvfs_tables` applies internally."""
+    if isinstance(freq_levels, Mapping):
+        unknown = set(freq_levels) - {BIG, LITTLE}
+        if unknown:
+            raise ValueError(f"unknown core types in freq_levels: "
+                             f"{sorted(unknown)} (use {BIG!r}/{LITTLE!r})")
+        missing = {BIG, LITTLE} - set(freq_levels)
+        if missing:
+            raise ValueError(f"per-core-type freq_levels must cover both "
+                             f"types; missing {sorted(missing)}")
+        return _ladder(freq_levels[BIG]), _ladder(freq_levels[LITTLE])
+    ladder = _ladder(freq_levels)
+    return ladder, list(ladder)
+
+
+def variant_tables(
+    chain: TaskChain, b: int, l: int,
+    freq_levels: Iterable[float] | Mapping[str, Iterable[float]],
+    variants: VariantSpec | None = None,
+) -> dict[tuple[str, float, float], tuple[_Matrix, TaskChain]]:
+    """HeRAD tables over the (variant, f_big, f_little) grid.
+
+    The 4-axis analogue of :func:`dvfs_tables`: every (global variant k,
+    frequency profile) cell runs the vectorized HeRAD DP on the chain
+    scaled by the variant multipliers AND 1/f — and since variant scaling
+    preserves the replicable structure, ALL K x P cells fill through one
+    stacked ``herad_tables`` pass. Keys are (variant name, f_big,
+    f_little); with a trivial (or absent) spec the grid degenerates to
+    ``dvfs_tables`` keyed with a leading "base".
+
+    A *global* variant per cell is enough for the sweep stage — like the
+    global (f_big, f_little) profiles, the cells seed the Pareto cloud
+    whose survivors the per-stage min-energy DP then refines with free
+    per-stage variant mixing (``repro.energy.pareto``).
+    """
+    big_levels, little_levels = variant_grid_levels(freq_levels)
+    names = variants.names if variants is not None else (DEFAULT_VARIANT,)
+    profiles = [(fb, fl) for fb in big_levels for fl in little_levels]
+    keys = [(k, fb, fl) for k in names for fb, fl in profiles]
+    scaled_chains = [scale_chain(chain, fb, fl, variant=k, variants=variants)
+                     for k, fb, fl in keys]
+    matrices = herad_tables(scaled_chains, b, l)
+    return {key: (matrix, scaled)
+            for key, matrix, scaled in zip(keys, matrices, scaled_chains)}
+
+
+def extract_variant_solution(
+    tables: Mapping[tuple[str, float, float], tuple[_Matrix, TaskChain]],
+    key: tuple[str, float, float],
+    b: int, l: int,
+    variants: VariantSpec | None = None,
+    merge: bool = True,
+) -> FreqSolution:
+    """Read the period-optimal schedule for grid cell ``key`` at sub-budget
+    (b, l) out of a :func:`variant_tables` result, annotated with the
+    cell's variant and frequencies."""
+    vname, f_big, f_little = key
+    table, scaled = tables[key]
+    sol = extract_solution(table, scaled, b, l, merge=merge)
+    if sol.is_empty():
+        return EMPTY_FREQ_SOLUTION
+    return FreqSolution(tuple(
+        FreqStage(st.start, st.end, st.cores, st.ctype,
+                  f_big if st.ctype == BIG else f_little, vname)
+        for st in sol.stages
+    ), variants=variants)

@@ -11,8 +11,10 @@ Layers:
     utilization, idle energy for allocated-but-waiting cores);
   - :mod:`repro.energy.pareto`  — (period, energy) Pareto frontiers from a
     single HeRAD DP table, the energy-constrained ``energad`` strategy
-    (minimum energy subject to a period bound), and the DVFS-aware
-    ``freqherad`` strategy plus the frequency-swept ``dvfs_frontier``.
+    (minimum energy subject to a period bound), the DVFS-aware
+    ``freqherad`` strategy plus the frequency-swept ``dvfs_frontier``,
+    and the 4-axis ``variant_herad`` / ``variant_frontier`` pair that
+    adds the kernel-variant dimension from :mod:`repro.core.variants`.
 
 Units: chain weights set the time unit (µs for the DVB-S2 tables), powers
 are watts, so energies come out in watt x time-unit (µJ per frame).
@@ -53,4 +55,8 @@ from .pareto import (  # noqa: F401
     sweep_budgets_freq,
     sweep_budgets_freq_reference,
     sweep_budgets_reference,
+    sweep_budgets_variant,
+    sweep_budgets_variant_reference,
+    variant_frontier,
+    variant_herad,
 )

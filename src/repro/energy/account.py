@@ -162,9 +162,13 @@ def _freq_energy_report(
 ) -> EnergyReport:
     """Accounting for per-stage-frequency solutions.
 
-    Uses the same :func:`stage_energy_terms` the freqherad DP optimizes
-    (work = stage sum / f, busy watts at the stage's level), so reported
-    energies match the DP objective bit for bit.
+    Uses the same :func:`stage_energy_terms` the freqherad / variant DPs
+    optimize (work = stage sum * m_k / f, busy watts at the stage's
+    level), so reported energies match the DP objective bit for bit. When
+    the solution carries a :class:`~repro.core.variants.VariantSpec`, each
+    stage's work is evaluated under its own chosen variant — the report's
+    per-type energy split (and with it the governor's per-point frontier
+    re-pricing) reflects the point's variant mix automatically.
     """
     achieved = solution.period(chain)
     if period is None:
@@ -175,7 +179,7 @@ def _freq_energy_report(
             f"{achieved}")
     stages = []
     for st in solution.stages:
-        work = st.work(chain)
+        work = st.work(chain, solution.variants)
         busy, idle = stage_energy_terms(work, st.cores, st.ctype, period,
                                         power, st.freq)
         util = work / (st.cores * period) if period > 0 else 0.0

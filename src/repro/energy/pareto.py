@@ -88,14 +88,18 @@ from repro.core.dvfs import (
     annotate_frequency,
     dvfs_tables,
     extract_dvfs_solution,
+    extract_variant_solution,
     scale_chain,
+    variant_tables,
 )
 from repro.core.herad import (
     extract_solution,
     herad,
     herad_table,
+    herad_tables,
     plane_merged_stages,
 )
+from repro.core.variants import DEFAULT_VARIANT, VariantSpec
 
 from .account import energy, stage_energy_terms
 from .model import (
@@ -186,7 +190,7 @@ def _resolve_levels(
 
 # ----------------------------------------------------------- candidate table
 class CandidateTable:
-    """Precomputed (stage [i, j], core type, frequency) candidates.
+    """Precomputed (stage [i, j], core type, frequency, variant) candidates.
 
     Everything about a candidate that does NOT depend on the period bound
     or the core budgets — interval work sums, replicability, per-level
@@ -200,36 +204,64 @@ class CandidateTable:
     serves a shrinking device pool (governor device loss). After drift
     recalibration only the chain weights change: :meth:`rescale` rebuilds
     the weight-derived arrays on the new chain and reuses the rest.
+
+    The kernel-variant axis is folded into the frequency axis: per core
+    type the candidates are laid out along ONE flat axis of K * |F_v|
+    entries, variant-major (variant 0 = base first, ladder ascending
+    within each variant — ``axis_f`` / ``axis_kidx`` name each entry).
+    Variant scaling multiplies interval sums exactly like 1/f divides
+    them, so every downstream kernel (queries, DP plane updates, the
+    dominance pruning) is unchanged modulo the longer axis; with a
+    trivial (or absent) spec the layout reduces to today's pure-frequency
+    table bit for bit.
     """
 
     def __init__(self, chain: TaskChain, power: PowerModel,
-                 levels: dict[str, tuple[float, ...]]):
+                 levels: dict[str, tuple[float, ...]],
+                 variants: VariantSpec | None = None):
         self.chain = chain
         self.power = power
         self.levels = levels
+        self.variants = variants
+        self.vnames = variants.names if variants is not None \
+            else (DEFAULT_VARIANT,)
+        # flat candidate axis per core type: variant-major, ladder within
+        self.axis_f = {v: [float(f) for _ in self.vnames
+                           for f in levels[v]] for v in (BIG, LITTLE)}
+        self.axis_kidx = {v: np.repeat(np.arange(len(self.vnames)),
+                                       len(levels[v]))
+                          for v in (BIG, LITTLE)}
         self.rep = chain.rep_matrix()
-        self.works = self._build_works(chain, levels)
+        self.works = self._build_works(chain, levels, variants)
         self._tri = np.tri(chain.n, dtype=bool).T  # j >= i
 
-    @staticmethod
-    def _build_works(chain, levels):
-        """works[v][fi, i, j] = stage_sum(i, j, v) / f — the per-frame busy
-        time of candidate stage [i, j] on type v at level fi. Shared by the
-        constructor and :meth:`rescale` so the two can never diverge."""
-        return {
-            v: chain.stage_sum_matrix(v)[None, :, :]
-            / np.asarray(levels[v], dtype=np.float64)[:, None, None]
-            for v in (BIG, LITTLE)
-        }
+    def _build_works(self, chain, levels, variants):
+        """works[v][ci, i, j] = stage_sum(i, j, v) * m_k / f — the per-frame
+        busy time of candidate stage [i, j] on type v at flat-axis entry ci
+        = (variant k, level f). Shared by the constructor and
+        :meth:`rescale` so the two can never diverge."""
+        out = {}
+        for v in (BIG, LITTLE):
+            f = np.asarray(levels[v], dtype=np.float64)
+            mats = np.stack([
+                (variants.scaled(chain, k) if variants is not None
+                 else chain).stage_sum_matrix(v)
+                for k in self.vnames])                     # (K, n, n)
+            out[v] = (mats[:, None, :, :] / f[None, :, None, None]) \
+                .reshape(len(self.vnames) * len(f), chain.n, chain.n)
+        return out
 
     @classmethod
     def build(cls, chain: TaskChain, power: PowerModel,
-              freq_levels=None) -> "CandidateTable":
+              freq_levels=None,
+              variants: VariantSpec | None = None) -> "CandidateTable":
         """Resolve the ladder spec (one shared tuple, a per-core-type
         mapping, or the model's default) and build the table."""
-        return cls(chain, power, _resolve_levels(power, freq_levels))
+        return cls(chain, power, _resolve_levels(power, freq_levels),
+                   variants)
 
-    def rescale(self, chain: TaskChain) -> "CandidateTable":
+    def rescale(self, chain: TaskChain,
+                variants: VariantSpec | None = None) -> "CandidateTable":
         """The same table on a reweighted chain (drift recalibration).
 
         The new chain's task weights are arbitrary — a uniform slowdown
@@ -238,25 +270,39 @@ class CandidateTable:
         rescale); both land here. Only the weight-derived ``works``
         arrays are rebuilt (from the new chain's prefix sums, so the
         result is bit-identical to a fresh build) — ladders, power
-        constants, and the replicability structure carry over as-is. The
-        chain must have the same length and replicable partition."""
+        constants, the variant axis, and the replicability structure
+        carry over as-is. The chain must have the same length and
+        replicable partition.
+
+        Pass ``variants`` to swap in refit multipliers at the same time
+        (the governor's active-variant drift recalibration); the spec
+        must list the same variant names so the flat candidate axis is
+        unchanged."""
         if chain.n != self.chain.n or \
                 not np.array_equal(chain.replicable, self.chain.replicable):
             raise ValueError("rescale needs an equal-structure chain")
+        if variants is None:
+            variants = self.variants
+        elif variants.names != self.vnames:
+            raise ValueError("rescale needs an equal variant-name set")
         other = CandidateTable.__new__(CandidateTable)
         other.chain = chain
         other.power = self.power
         other.levels = self.levels
+        other.variants = variants
+        other.vnames = self.vnames
+        other.axis_f = self.axis_f
+        other.axis_kidx = self.axis_kidx
         other.rep = self.rep
         other._tri = self._tri
-        other.works = self._build_works(chain, self.levels)
+        other.works = self._build_works(chain, self.levels, variants)
         return other
 
     def query(self, b: int, l: int, p_max: float) -> dict:
         """Price and filter every candidate for one (budget, period) query.
 
         Returns ``{v: (r, cost, feasible)}`` arrays of shape
-        ``(|F_v|, n, n)``: minimum replica counts (``cores_for_work``),
+        ``(K * |F_v|, n, n)``: minimum replica counts (``cores_for_work``),
         stage energies (:func:`stage_energy_terms` — busy at the
         candidate's level, idle against the ``p_max`` beat), and the
         feasibility mask (budget caps, sequential stages capped at one
@@ -265,11 +311,15 @@ class CandidateTable:
 
         The feasibility mask is additionally pruned of candidates that
         provably never win a DP cell: within one (stage, type, replica
-        count) group, a higher-level candidate whose cost is >= an
-        earlier (lower-f) member's can never strictly beat a plane the
-        earlier member already updated (float addition is monotone and
-        the DP compares with strict <), so dropping it changes nothing —
-        including tie-breaking.
+        count) group, a later flat-axis candidate whose cost is >= an
+        earlier member's can never strictly beat a plane the earlier
+        member already updated (float addition is monotone and the DP
+        compares with strict <), so dropping it changes nothing —
+        including tie-breaking. Along one variant this is the dominated-
+        ladder-level rule; across variants it is the variant-dominance
+        rule (a variant slower AND no cheaper at the same replica count
+        is dropped — in particular, unregistered tasks' duplicate base
+        candidates vanish here).
         """
         out = {}
         for v in (BIG, LITTLE):
@@ -283,16 +333,16 @@ class CandidateTable:
             r = np.where(self.rep[None, :, :], r_real, 1.0)
             r = np.minimum(r, max(cap, 1)).astype(np.int64)
             cost = np.zeros_like(work)
-            for fi, f in enumerate(self.levels[v]):
+            for ci, f in enumerate(self.axis_f[v]):
                 busy, idle = stage_energy_terms(
-                    work[fi], r[fi], v, p_max, self.power, f)
-                cost[fi] = busy + idle
-            for fi in range(1, len(self.levels[v])):
+                    work[ci], r[ci], v, p_max, self.power, f)
+                cost[ci] = busy + idle
+            for ci in range(1, len(self.axis_f[v])):
                 dominated = np.zeros(feas.shape[1:], dtype=bool)
-                for fj in range(fi):
-                    dominated |= feas[fj] & (r[fj] == r[fi]) \
-                        & (cost[fj] <= cost[fi])
-                feas[fi] &= ~dominated
+                for cj in range(ci):
+                    dominated |= feas[cj] & (r[cj] == r[ci]) \
+                        & (cost[cj] <= cost[ci])
+                feas[ci] &= ~dominated
             out[v] = (r, cost, feas)
         return out
 
@@ -300,7 +350,7 @@ class CandidateTable:
         """:meth:`query` over a whole vector of period bounds at once.
 
         Returns ``{v: (r, cost, feasible)}`` arrays of shape
-        ``(S, |F_v|, n, n)`` for ``S = len(p_maxes)`` — the ``s``-th
+        ``(S, K * |F_v|, n, n)`` for ``S = len(p_maxes)`` — the ``s``-th
         slice is elementwise identical to ``query(b, l, p_maxes[s])``:
         every operation below is the scalar query's with a broadcast
         leading axis, and numpy elementwise float ops are deterministic
@@ -321,16 +371,16 @@ class CandidateTable:
             r = np.where(self.rep[None, None, :, :], r_real, 1.0)
             r = np.minimum(r, max(cap, 1)).astype(np.int64)
             cost = np.zeros(r_real.shape)
-            for fi, f in enumerate(self.levels[v]):
+            for ci, f in enumerate(self.axis_f[v]):
                 busy, idle = stage_energy_terms(
-                    work[fi], r[:, fi], v, p[:, 0], self.power, f)
-                cost[:, fi] = busy + idle
-            for fi in range(1, len(self.levels[v])):
-                dominated = np.zeros(feas[:, fi].shape, dtype=bool)
-                for fj in range(fi):
-                    dominated |= feas[:, fj] & (r[:, fj] == r[:, fi]) \
-                        & (cost[:, fj] <= cost[:, fi])
-                feas[:, fi] &= ~dominated
+                    work[ci], r[:, ci], v, p[:, 0], self.power, f)
+                cost[:, ci] = busy + idle
+            for ci in range(1, len(self.axis_f[v])):
+                dominated = np.zeros(feas[:, ci].shape, dtype=bool)
+                for cj in range(ci):
+                    dominated |= feas[:, cj] & (r[:, cj] == r[:, ci]) \
+                        & (cost[:, cj] <= cost[:, ci])
+                feas[:, ci] &= ~dominated
             out[v] = (r, cost, feas)
         return out
 
@@ -349,27 +399,31 @@ def _min_energy_dp(table: CandidateTable, b: int, l: int,
     q = table.query(b, l, p_max)
     # enumerate the surviving candidates once with numpy, in exactly the
     # scalar reference's order: stage start ascending, big before little,
-    # ladder ascending (lexsort keys are read last-to-first)
-    jjs, iis, rrs, vvs, ffs, dbs, dls, ccs = \
+    # flat candidate axis ascending = variant registration order, ladder
+    # ascending within a variant (lexsort keys are read last-to-first)
+    jjs, iis, rrs, vvs, aas, ffs, kks, ccs = \
         [], [], [], [], [], [], [], []
     for vflag, v in enumerate((BIG, LITTLE)):
         rv, cv, fev = q[v]
-        ff, ii, jj = np.nonzero(fev)
+        aa, ii, jj = np.nonzero(fev)
         jjs.append(jj)
         iis.append(ii)
-        rrs.append(rv[ff, ii, jj])
+        rrs.append(rv[aa, ii, jj])
         vvs.append(np.full(len(jj), vflag, dtype=np.int8))
-        ffs.append(np.asarray(table.levels[v])[ff])
-        ccs.append(cv[ff, ii, jj])
+        aas.append(aa)
+        ffs.append(np.asarray(table.axis_f[v])[aa])
+        kks.append(table.axis_kidx[v][aa])
+        ccs.append(cv[aa, ii, jj])
     jj = np.concatenate(jjs)
     ii = np.concatenate(iis)
     rr = np.concatenate(rrs)
     vv = np.concatenate(vvs)
-    order = np.lexsort((np.concatenate(ffs), vv, ii, jj))
+    order = np.lexsort((np.concatenate(aas), vv, ii, jj))
     jj, ii, rr, vv = jj[order], ii[order], rr[order], vv[order]
     recs_all = list(zip(
         ii.tolist(), rr.tolist(), vv.tolist(),
         np.concatenate(ffs)[order].tolist(),
+        np.concatenate(kks)[order].tolist(),
         np.where(vv == 0, rr, 0).tolist(),
         np.where(vv == 0, 0, rr).tolist(),
         np.concatenate(ccs)[order].tolist()))
@@ -382,7 +436,7 @@ def _min_energy_dp(table: CandidateTable, b: int, l: int,
     for j in range(n):
         recs = recs_all[bounds[j]:bounds[j + 1]]
         Ej, pj = E[j], pid[j]
-        for cidx, (i, r, vflag, f, db, dl, cost) in enumerate(recs):
+        for cidx, (i, r, vflag, f, kidx, db, dl, cost) in enumerate(recs):
             if i == 0:
                 if cost < Ej[db, dl]:
                     Ej[db, dl] = cost
@@ -405,13 +459,15 @@ def _min_energy_dp(table: CandidateTable, b: int, l: int,
     stages: list[FreqStage] = []
     j = n - 1
     while j >= 0:
-        i, r, vflag, f, db, dl, _ = cands[j][pid[j][ub, ul]]
-        stages.append(FreqStage(i, j, r, BIG if vflag == 0 else LITTLE, f))
+        i, r, vflag, f, kidx, db, dl, _ = cands[j][pid[j][ub, ul]]
+        stages.append(FreqStage(i, j, r, BIG if vflag == 0 else LITTLE, f,
+                                table.vnames[kidx]))
         j, ub, ul = i - 1, ub - db, ul - dl
-    # merging adjacent same-type same-frequency replicable stages changes
-    # neither period nor energy (both terms are additive) but saves
-    # runtime stage hops
-    return FreqSolution(tuple(reversed(stages))).merge_replicable(chain)
+    # merging adjacent same-type same-frequency same-variant replicable
+    # stages changes neither period nor energy (both terms are additive)
+    # but saves runtime stage hops
+    return FreqSolution(tuple(reversed(stages)),
+                        variants=table.variants).merge_replicable(chain)
 
 
 def _min_energy_dp_batch(table: CandidateTable, b: int, l: int,
@@ -443,25 +499,31 @@ def _min_energy_dp_batch(table: CandidateTable, b: int, l: int,
     # invalid bounds get a dummy 1.0 query and a fully masked-off plane
     q = table.query_batch(b, l, np.where(ok, p, 1.0))
     # union candidate enumeration, in the scalar DP's order: stage start
-    # ascending, big before little, ladder ascending
-    jjs, iis, vvs, ffs, rss, css, mss = [], [], [], [], [], [], []
+    # ascending, big before little, flat (variant, ladder) axis ascending
+    jjs, iis, vvs, aas, ffs, kks, rss, css, mss = \
+        [], [], [], [], [], [], [], [], []
     for vflag, v in enumerate((BIG, LITTLE)):
         rv, cv, fev = q[v]
         fev &= ok[:, None, None, None]
-        ff, ii, jj = np.nonzero(fev.any(axis=0))
+        aa, ii, jj = np.nonzero(fev.any(axis=0))
         jjs.append(jj)
         iis.append(ii)
         vvs.append(np.full(len(jj), vflag, dtype=np.int8))
-        ffs.append(np.asarray(table.levels[v])[ff])
-        rss.append(rv[:, ff, ii, jj])
-        css.append(cv[:, ff, ii, jj])
-        mss.append(fev[:, ff, ii, jj])
+        aas.append(aa)
+        ffs.append(np.asarray(table.axis_f[v])[aa])
+        kks.append(table.axis_kidx[v][aa])
+        rss.append(rv[:, aa, ii, jj])
+        css.append(cv[:, aa, ii, jj])
+        mss.append(fev[:, aa, ii, jj])
     jj = np.concatenate(jjs)
     ii = np.concatenate(iis)
     vv = np.concatenate(vvs)
+    aa = np.concatenate(aas)
     fv = np.concatenate(ffs)
-    order = np.lexsort((fv, vv, ii, jj))
-    jj, ii, vv, fv = jj[order], ii[order], vv[order], fv[order]
+    kk = np.concatenate(kks)
+    order = np.lexsort((aa, vv, ii, jj))
+    jj, ii, vv, fv, kk = \
+        jj[order], ii[order], vv[order], fv[order], kk[order]
     rr = np.concatenate(rss, axis=1)[:, order]   # (S, m) replica counts
     cc = np.concatenate(css, axis=1)[:, order]   # (S, m) costs
     mm = np.concatenate(mss, axis=1)[:, order]   # (S, m) feasibility
@@ -510,11 +572,13 @@ def _min_energy_dp_batch(table: CandidateTable, b: int, l: int,
             cidx = int(bounds[j]) + int(pid[j][s, ub, ul])
             i, r_ = int(ii[cidx]), int(rr[s, cidx])
             vt = BIG if vv[cidx] == 0 else LITTLE
-            stages.append(FreqStage(i, j, r_, vt, float(fv[cidx])))
+            stages.append(FreqStage(i, j, r_, vt, float(fv[cidx]),
+                                    table.vnames[int(kk[cidx])]))
             db, dl = (r_, 0) if vt == BIG else (0, r_)
             j, ub, ul = i - 1, ub - db, ul - dl
         sols.append(
-            FreqSolution(tuple(reversed(stages))).merge_replicable(chain))
+            FreqSolution(tuple(reversed(stages)),
+                         variants=table.variants).merge_replicable(chain))
     return sols
 
 
@@ -524,8 +588,10 @@ def min_energy_under_period_freq(
     power: PowerModel = DEFAULT_DVFS_POWER,
     freq_levels=None,
     candidates: CandidateTable | None = None,
+    variants: VariantSpec | None = None,
 ) -> FreqSolution:
-    """Minimum-energy (schedule, per-stage DVFS level) with period <= p_max.
+    """Minimum-energy (schedule, per-stage DVFS level, per-stage kernel
+    variant) with period <= p_max.
 
     The exact min-sum DP of :func:`min_energy_under_period` with the
     candidate set widened by the frequency axis: a stage [i, j] on type v
@@ -533,7 +599,12 @@ def min_energy_under_period_freq(
     ceil((w/f) / p_max)) and is costed with
     ``stage_energy_terms(w/f, r, v, p_max, power, f)`` — the same single
     source of truth the accounting report uses, so the DP's objective and
-    the reported energy cannot drift apart.
+    the reported energy cannot drift apart. A ``variants`` spec widens it
+    once more: every candidate is also priced under each kernel variant's
+    per-core-type weight multipliers (w -> w * m_k), so the DP mixes
+    implementations per stage exactly like it mixes DVFS levels; without
+    a spec (or with a trivial one) the DP is today's 3-axis FreqHeRAD bit
+    for bit.
 
     ``freq_levels`` defaults to ``power.freq_levels`` and may be one
     shared tuple or a per-core-type mapping (``{"big": ..., "little":
@@ -548,15 +619,16 @@ def min_energy_under_period_freq(
     Vectorized over the (b+1, l+1) budget plane; bit-identical results to
     :func:`min_energy_under_period_freq_reference` (the retained scalar
     oracle). ``candidates`` short-circuits the per-call precomputation
-    with a shared :class:`CandidateTable` (its chain/power/ladders take
-    precedence over the ``chain``/``power``/``freq_levels`` arguments) —
-    frontier refinement and the governor reuse one table across all
-    ``p_max`` queries.
+    with a shared :class:`CandidateTable` (its chain/power/ladders/spec
+    take precedence over the ``chain``/``power``/``freq_levels``/
+    ``variants`` arguments) — frontier refinement and the governor reuse
+    one table across all ``p_max`` queries.
     """
     if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
         return EMPTY_FREQ_SOLUTION
     if candidates is None:
-        candidates = CandidateTable.build(chain, power, freq_levels)
+        candidates = CandidateTable.build(chain, power, freq_levels,
+                                          variants)
     return _min_energy_dp(candidates, b, l, p_max)
 
 
@@ -565,6 +637,7 @@ def min_energy_under_period_freq_batch(
     power: PowerModel = DEFAULT_DVFS_POWER,
     freq_levels=None,
     candidates: CandidateTable | None = None,
+    variants: VariantSpec | None = None,
 ) -> list[FreqSolution]:
     """:func:`min_energy_under_period_freq` over a vector of bounds.
 
@@ -582,7 +655,8 @@ def min_energy_under_period_freq_batch(
     if b + l <= 0:
         return [EMPTY_FREQ_SOLUTION] * len(list(p_maxes))
     if candidates is None:
-        candidates = CandidateTable.build(chain, power, freq_levels)
+        candidates = CandidateTable.build(chain, power, freq_levels,
+                                          variants)
     return _min_energy_dp_batch(candidates, b, l, p_maxes)
 
 
@@ -590,56 +664,65 @@ def min_energy_under_period_freq_reference(
     chain: TaskChain, b: int, l: int, p_max: float,
     power: PowerModel = DEFAULT_DVFS_POWER,
     freq_levels=None,
+    variants: VariantSpec | None = None,
 ) -> FreqSolution:
     """Scalar-loop oracle for :func:`min_energy_under_period_freq`.
 
-    The original pure-Python DP, kept verbatim as the certification
-    reference: the vectorized kernel must reproduce its schedules,
-    energies, and tie-breaking bit for bit (see tests/test_pareto_equiv).
+    The original pure-Python DP, kept as the certification reference:
+    the vectorized kernel must reproduce its schedules, energies, and
+    tie-breaking bit for bit (see tests/test_pareto_equiv). The variant
+    axis enumerates per stage and type as an outer loop around the
+    ladder — variant registration order first, level ascending within —
+    matching the vectorized table's flat candidate axis; without a spec
+    the loop body collapses to the pre-variant reference verbatim.
     Prefer the vectorized entry point everywhere else.
     """
     levels = _resolve_levels(power, freq_levels)
     if b + l <= 0 or not math.isfinite(p_max) or p_max <= 0:
         return EMPTY_FREQ_SOLUTION
+    vnames = variants.names if variants is not None else (DEFAULT_VARIANT,)
     n = chain.n
     INF = (math.inf, math.inf, math.inf)
     # best[j][ub][ul] = (energy, big used, little used) for tasks [0, j]
     # using exactly ub big and ul little cores; parent[j][ub][ul] is the
-    # (stage start, cores, ctype, freq, prev ub, prev ul) reconstruction
-    # record.
+    # (stage start, cores, ctype, freq, variant, prev ub, prev ul)
+    # reconstruction record.
     best = [[[INF] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
     parent: list[list[list[tuple | None]]] = [
         [[None] * (l + 1) for _ in range(b + 1)] for _ in range(n)]
     for j in range(n):
         # feasible stage candidates [i, j]:
-        # (i, r, v, f, delta_b, delta_l, cost)
-        cands: list[tuple[int, int, str, float, int, int, float]] = []
+        # (i, r, v, f, k, delta_b, delta_l, cost)
+        cands: list[tuple[int, int, str, float, str, int, int, float]] = []
         for i in range(j + 1):
             rep = chain.is_rep(i, j)
             for v in (BIG, LITTLE):
                 cap = b if v == BIG else l
                 if cap == 0:
                     continue
-                total = chain.stage_sum(i, j, v)
-                for f in levels[v]:
-                    work = total / f
-                    r = cores_for_work(work, p_max)
-                    if not rep:
-                        if r > 1:  # sequential stage cannot replicate
+                for k in vnames:
+                    total = (variants.scaled(chain, k)
+                             if variants is not None
+                             else chain).stage_sum(i, j, v)
+                    for f in levels[v]:
+                        work = total / f
+                        r = cores_for_work(work, p_max)
+                        if not rep:
+                            if r > 1:  # sequential stage cannot replicate
+                                continue
+                            r = 1
+                        elif r > cap:
                             continue
-                        r = 1
-                    elif r > cap:
-                        continue
-                    cost = sum(stage_energy_terms(work, r, v, p_max,
-                                                  power, f))
-                    db, dl = (r, 0) if v == BIG else (0, r)
-                    cands.append((i, r, v, f, db, dl, cost))
-        for i, r, v, f, db, dl, cost in cands:
+                        cost = sum(stage_energy_terms(work, r, v, p_max,
+                                                      power, f))
+                        db, dl = (r, 0) if v == BIG else (0, r)
+                        cands.append((i, r, v, f, k, db, dl, cost))
+        for i, r, v, f, k, db, dl, cost in cands:
             if i == 0:
                 key = (cost, db, dl)
                 if key < best[j][db][dl]:
                     best[j][db][dl] = key
-                    parent[j][db][dl] = (0, r, v, f, 0, 0)
+                    parent[j][db][dl] = (0, r, v, f, k, 0, 0)
                 continue
             prev = best[i - 1]
             for pb in range(b + 1 - db):
@@ -651,7 +734,7 @@ def min_energy_under_period_freq_reference(
                     key = (pe + cost, ub, ul)
                     if key < best[j][ub][ul]:
                         best[j][ub][ul] = key
-                        parent[j][ub][ul] = (i, r, v, f, pb, pl)
+                        parent[j][ub][ul] = (i, r, v, f, k, pb, pl)
     # pick the cheapest end state
     end = min(
         ((best[n - 1][ub][ul], ub, ul)
@@ -666,13 +749,14 @@ def min_energy_under_period_freq_reference(
     while j >= 0:
         rec = parent[j][ub][ul]
         assert rec is not None
-        i, r, v, f, pb, pl = rec
-        stages.append(FreqStage(i, j, r, v, f))
+        i, r, v, f, k, pb, pl = rec
+        stages.append(FreqStage(i, j, r, v, f, k))
         j, ub, ul = i - 1, pb, pl
-    # merging adjacent same-type same-frequency replicable stages changes
-    # neither period nor energy (both terms are additive) but saves
-    # runtime stage hops
-    return FreqSolution(tuple(reversed(stages))).merge_replicable(chain)
+    # merging adjacent same-type same-frequency same-variant replicable
+    # stages changes neither period nor energy (both terms are additive)
+    # but saves runtime stage hops
+    return FreqSolution(tuple(reversed(stages)),
+                        variants=variants).merge_replicable(chain)
 
 
 def min_energy_under_period(
@@ -780,6 +864,99 @@ def freqherad(
         # DP's feasibility checks use consistent arithmetic
         p_max = annotate_frequency(ref, fb_max, fl_max).period(chain)
     return min_energy_under_period_freq(chain, b, l, p_max, power, levels)
+
+
+# ------------------------------------------------------------- VariantHeRAD
+class _MinVariantChain:
+    """Chain-like view whose interval sums are the elementwise minimum over
+    variant-scaled chains.
+
+    Each stage picks its kernel variant independently, so the minimum
+    achievable period over per-stage variant assignments is the min-max DP
+    run on ``min_k sum(w * m_k) / f`` interval sums — this object feeds
+    exactly those sums to ``herad_tables``, which only reads ``n``,
+    ``replicable``, ``is_rep`` and ``stage_sum_matrix`` (the min is not
+    additive over tasks, so no real ``TaskChain`` could represent it).
+    With a single variant the min over one chain is that chain's own
+    matrix, bit for bit.
+    """
+
+    def __init__(self, scaled_chains, sums):
+        self._base = scaled_chains[0]
+        self.n = self._base.n
+        self.replicable = self._base.replicable
+        self._mats = {v: np.min(sums[v], axis=0) for v in (BIG, LITTLE)}
+
+    def stage_sum_matrix(self, v):
+        return self._mats[v]
+
+    def is_rep(self, s, e):
+        return self._base.is_rep(s, e)
+
+
+def variant_herad(
+    chain: TaskChain, b: int, l: int,
+    power: PowerModel | None = None,
+    variants: VariantSpec | None = None,
+    p_max: float | None = None,
+    freq_levels=None,
+) -> FreqSolution:
+    """Variant-aware FreqHeRAD: per-stage (core type, replicas, frequency
+    level, kernel variant), lexicographically optimizing (period, energy).
+
+    The 4-axis generalization of :func:`freqherad`. With ``p_max=None``
+    the bound is the minimum achievable period over ALL frequency AND
+    variant assignments: latency is monotone in f (every stage clocks at
+    the top level for the bound) and each stage's variant choice is
+    independent, so the optimum is plain HeRAD on the elementwise
+    ``min_k`` of the variant-scaled interval sums
+    (:class:`_MinVariantChain`) — one more stacked-fill reuse of the
+    ``herad_table`` machinery. Stages of that reference schedule are
+    annotated with their argmin variant (ties to the earliest-registered
+    one) and the bound is re-evaluated through the ``FreqStage.weight``
+    formula, keeping the bound and the DP's feasibility checks on
+    consistent arithmetic, exactly as freqherad does. The 4-axis
+    min-energy DP (:func:`min_energy_under_period_freq` with
+    ``variants``) then spends per-stage slack on downclocking *or* on a
+    cheaper implementation.
+
+    Without a spec (or with a trivial single-variant one) every step
+    degenerates to :func:`freqherad`'s bit for bit — the same
+    specialization property energad ⊂ freqherad established, certified in
+    tests/test_variants.py. Registered in ``repro.core.STRATEGIES`` as
+    ``"variant_herad"``.
+    """
+    if power is None:
+        power = DEFAULT_DVFS_POWER
+    levels = _resolve_levels(power, freq_levels)
+    if b + l <= 0:
+        return EMPTY_FREQ_SOLUTION
+    if p_max is None:
+        fb_max, fl_max = levels[BIG][-1], levels[LITTLE][-1]
+        vnames = variants.names if variants is not None \
+            else (DEFAULT_VARIANT,)
+        scaled = [scale_chain(chain, fb_max, fl_max, variant=k,
+                              variants=variants) for k in vnames]
+        sums = {v: np.stack([c.stage_sum_matrix(v) for c in scaled])
+                for v in (BIG, LITTLE)}
+        minchain = _MinVariantChain(scaled, sums)
+        table = herad_tables([minchain], b, l)[0]
+        # merge AFTER variant annotation: only same-variant neighbours
+        # may fuse (FreqSolution.merge_replicable), since a merged stage
+        # runs one implementation
+        ref = extract_solution(table, minchain, b, l, merge=False)
+        if ref.is_empty():
+            return EMPTY_FREQ_SOLUTION
+        ref_fsol = FreqSolution(tuple(
+            FreqStage(st.start, st.end, st.cores, st.ctype,
+                      fb_max if st.ctype == BIG else fl_max,
+                      vnames[int(np.argmin(
+                          sums[st.ctype][:, st.start, st.end]))])
+            for st in ref.stages
+        ), variants=variants).merge_replicable(chain)
+        p_max = ref_fsol.period(chain)
+    return min_energy_under_period_freq(chain, b, l, p_max, power, levels,
+                                        variants=variants)
 
 
 # ----------------------------------------------------------- budget sweeps
@@ -1034,6 +1211,115 @@ def sweep_budgets_freq_reference(
     return points
 
 
+def _sweep_fields_variant(chain: TaskChain, b: int, l: int,
+                          power: PowerModel, freq_levels=None,
+                          variants: VariantSpec | None = None):
+    """(variant x profile)-grid tables plus per-cell point fields.
+
+    One stacked ``herad_tables`` fill over all K x P grid cells
+    (:func:`repro.core.dvfs.variant_tables`), then one vectorized pricing
+    pass per variant — each variant's cells are priced on its own scaled
+    chain, replaying the ``FreqStage.weight`` / ``energy_report`` float
+    operations of the annotated extraction. Returns the tables, the grid
+    keys (in table order, variant-major), the profile list, and the
+    concatenated (feasible, period, energy) arrays of shape
+    ``(K * P, b + 1, l + 1)`` whose leading axis follows the key order.
+    """
+    levels = _resolve_levels(power, freq_levels)
+    tables = variant_tables(chain, b, l, levels, variants)
+    keys = list(tables)
+    vnames = variants.names if variants is not None else (DEFAULT_VARIANT,)
+    profiles = [(fb, fl) for (k, fb, fl) in keys if k == vnames[0]]
+    col = np.array(profiles)[:, :, None, None]           # (P, 2, 1, 1)
+    bw_b = np.array([power.busy_watts(BIG, fb)
+                     for fb, _ in profiles])[:, None, None]
+    bw_l = np.array([power.busy_watts(LITTLE, fl)
+                     for _, fl in profiles])[:, None, None]
+    feas_parts, per_parts, en_parts = [], [], []
+    for k in vnames:
+        stacked = _StackedTables([tables[(k, fb, fl)][0]
+                                  for fb, fl in profiles])
+        chain_k = variants.scaled(chain, k) if variants is not None \
+            else chain
+        feasible, period, en = _plane_point_fields(
+            stacked, chain, chain_k, col[:, 0], col[:, 1], bw_b, bw_l,
+            power)
+        feas_parts.append(feasible)
+        per_parts.append(period)
+        en_parts.append(en)
+    return (tables, keys, profiles, np.concatenate(feas_parts),
+            np.concatenate(per_parts), np.concatenate(en_parts))
+
+
+def sweep_budgets_variant(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    freq_levels=None,
+    variants: VariantSpec | None = None,
+) -> list[ParetoPoint]:
+    """All (sub-budget x frequency-profile x variant) HeRAD optima.
+
+    The kernel-variant axis of the Pareto enumeration: for every global
+    variant k and per-core-type profile (f_big, f_little), the
+    period-optimal schedule of every sub-budget (b', l') <= (b, l) —
+    all K x P tables filled through ONE stacked DP pass. Points carry
+    lazily-extracted variant/frequency-annotated schedules costed at
+    their own achieved period; sorted by (period, energy). A global
+    variant per point is enough here — the refinement DP of
+    :func:`variant_frontier` mixes variants per stage. Bit-identical to
+    :func:`sweep_budgets_variant_reference`; with a trivial (or absent)
+    spec, numerically identical to :func:`sweep_budgets_freq`.
+    """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables, keys, _profiles, feasible, period, en = _sweep_fields_variant(
+        chain, b, l, power, freq_levels, variants)
+    points: list[ParetoPoint] = []
+    for gi, key in enumerate(keys):
+        for bb in range(b + 1):
+            for ll in range(l + 1):
+                if bb + ll == 0 or not feasible[gi, bb, ll]:
+                    continue
+
+                def ex(key=key, bb=bb, ll=ll):
+                    return extract_variant_solution(tables, key, bb, ll,
+                                                    variants)
+
+                points.append(ParetoPoint(period[gi, bb, ll],
+                                          en[gi, bb, ll],
+                                          budget=(bb, ll), extract=ex))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
+def sweep_budgets_variant_reference(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    freq_levels=None,
+    variants: VariantSpec | None = None,
+) -> list[ParetoPoint]:
+    """Scalar oracle for :func:`sweep_budgets_variant`: one extraction +
+    one accounting call per (grid cell, sub-budget)."""
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables = variant_tables(chain, b, l,
+                            _resolve_levels(power, freq_levels), variants)
+    points: list[ParetoPoint] = []
+    for key in tables:
+        for bb in range(b + 1):
+            for ll in range(l + 1):
+                if bb + ll == 0:
+                    continue
+                fsol = extract_variant_solution(tables, key, bb, ll,
+                                                variants)
+                if fsol.is_empty():
+                    continue
+                p = fsol.period(chain)
+                points.append(
+                    ParetoPoint(p, energy(chain, fsol, power), fsol,
+                                (bb, ll)))
+    points.sort(key=lambda pt: (pt.period, pt.energy))
+    return points
+
+
 # --------------------------------------------------------------- frontiers
 def _non_dominated(points: list[ParetoPoint]) -> list[ParetoPoint]:
     """Strictly monotone frontier: period increases, energy decreases."""
@@ -1143,12 +1429,69 @@ def dvfs_frontier(
     return _non_dominated(refined)
 
 
+def variant_frontier(
+    chain: TaskChain, b: int, l: int, power: PowerModel,
+    variants: VariantSpec | None = None,
+    freq_levels=None,
+    refine: bool = True,
+    candidates: CandidateTable | None = None,
+) -> list[ParetoPoint]:
+    """The (period, energy) frontier with kernel variant as a fourth axis.
+
+    Like :func:`dvfs_frontier` but sweeping the full (b', l', f_big,
+    f_little, variant) grid (:func:`sweep_budgets_variant` machinery —
+    one stacked DP fill); with ``refine=True`` each surviving period
+    level is re-optimized by the exact 4-axis DP, which mixes levels AND
+    implementations per stage and therefore only lowers the curve. Every
+    point of the best *fixed-variant* frontier is weakly dominated by
+    this one; when variants trade speed for per-core-type efficiency the
+    domination is strict under tight power caps (the planner swaps in
+    the slower-but-cooler kernel — see examples/kernel_frontier.py).
+    With a trivial (or absent) spec this degenerates to
+    :func:`dvfs_frontier` numerically.
+    """
+    if b < 0 or l < 0 or b + l <= 0:
+        return []
+    tables, keys, _profiles, feasible, period, en = _sweep_fields_variant(
+        chain, b, l, power, freq_levels, variants)
+    cells = (b + 1) * (l + 1)
+
+    def cell_info(fi):
+        gi, rem = divmod(fi, cells)
+        bb, ll = divmod(rem, l + 1)
+        key = keys[gi]
+        return ((bb, ll),
+                lambda: extract_variant_solution(tables, key, bb, ll,
+                                                 variants))
+
+    points = _survivor_points(feasible, period, en, cell_info)
+    if not refine or not points:
+        return points
+    if candidates is None:
+        candidates = CandidateTable.build(chain, power, freq_levels,
+                                          variants)
+    # all surviving period levels re-optimized by ONE batched 4-axis DP
+    fsols = _min_energy_dp_batch(candidates, b, l,
+                                 [pt.period for pt in points])
+    refined: list[ParetoPoint] = []
+    for pt, fsol in zip(points, fsols):
+        if fsol.is_empty():
+            refined.append(pt)
+            continue
+        e = energy(chain, fsol, power, period=pt.period)
+        refined.append(
+            ParetoPoint(pt.period, e, fsol, fsol.core_usage())
+            if e < pt.energy else pt)
+    return _non_dominated(refined)
+
+
 # ---------------------------------------------------------- power-cap query
 def min_period_under_power(
     chain: TaskChain, b: int, l: int, power: PowerModel, cap_w: float,
     dvfs: bool = False,
     freq_levels=None,
     frontier: list[ParetoPoint] | None = None,
+    variants: VariantSpec | None = None,
 ) -> ParetoPoint | None:
     """Fastest frontier point whose average power fits under ``cap_w``.
 
@@ -1172,11 +1515,16 @@ def min_period_under_power(
     frontier builders return it) skips the sweep — the governor caches it
     across control ticks. Returns ``None`` when even the frugalest
     frontier point exceeds the cap (or the frontier is empty); callers
-    decide the fallback policy.
+    decide the fallback policy. A ``variants`` spec (implies the DVFS
+    grid) queries the 4-axis :func:`variant_frontier` instead.
     """
     if frontier is None:
-        frontier = dvfs_frontier(chain, b, l, power, freq_levels) if dvfs \
-            else pareto_frontier(chain, b, l, power)
+        if variants is not None:
+            frontier = variant_frontier(chain, b, l, power, variants,
+                                        freq_levels)
+        else:
+            frontier = dvfs_frontier(chain, b, l, power, freq_levels) \
+                if dvfs else pareto_frontier(chain, b, l, power)
 
     def admissible(pt: ParetoPoint) -> bool:
         return pt.period > 0 and pt.energy / pt.period <= cap_w + 1e-9
@@ -1197,6 +1545,7 @@ def min_energy_meeting_deadline(
     dvfs: bool = False,
     freq_levels=None,
     frontier: list[ParetoPoint] | None = None,
+    variants: VariantSpec | None = None,
 ) -> ParetoPoint | None:
     """Minimum-energy frontier point with period <= ``period_need`` under
     ``cap_w`` — the deadline-safe serving query (EAPS shape).
@@ -1216,8 +1565,12 @@ def min_energy_meeting_deadline(
     (``cap + 1e-9`` watts, ``period_need * (1 + 1e-9)`` time units).
     """
     if frontier is None:
-        frontier = dvfs_frontier(chain, b, l, power, freq_levels) if dvfs \
-            else pareto_frontier(chain, b, l, power)
+        if variants is not None:
+            frontier = variant_frontier(chain, b, l, power, variants,
+                                        freq_levels)
+        else:
+            frontier = dvfs_frontier(chain, b, l, power, freq_levels) \
+                if dvfs else pareto_frontier(chain, b, l, power)
     if not frontier:
         return None
 

@@ -2,7 +2,10 @@
 # is a scheduling contribution with no kernel-level component — these cover
 # the model substrate): flash attention (causal/sliding-window/GQA) and the
 # Mamba2 SSD chunked scan. Each package: kernel.py (pl.pallas_call +
-# BlockSpec VMEM tiling), ops.py (jit'd wrapper), ref.py (pure-jnp oracle).
-# Validated in interpret mode on CPU (tests/test_kernels.py); TPU is the
-# compile target.
-from repro.kernels import flash_attention, ssd_scan  # noqa: F401
+# BlockSpec VMEM tiling), ops.py (jit'd wrapper), ref.py (pure-jnp oracle),
+# plus alternate implementations (flash_attention/chunked.py's two-pass
+# lazy softmax). registry.py catalogs the selectable implementations per
+# family and bridges them into the scheduling variant axis
+# (repro.core.variants). Validated in interpret mode on CPU
+# (tests/test_kernels.py); TPU is the compile target.
+from repro.kernels import flash_attention, registry, ssd_scan  # noqa: F401

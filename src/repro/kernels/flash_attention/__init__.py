@@ -1,2 +1,3 @@
 from repro.kernels.flash_attention import ops, ref  # noqa: F401
+from repro.kernels.flash_attention.chunked import chunked_attention_tpu  # noqa: F401
 from repro.kernels.flash_attention.kernel import flash_attention_tpu  # noqa: F401

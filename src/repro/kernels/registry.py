@@ -1,0 +1,91 @@
+"""Catalog of selectable kernel implementations per family.
+
+Each kernel family ships several implementations of the same function —
+different points in time/energy per core type, which is exactly what the
+scheduling variant axis (``repro.core.variants``) prices. This module
+names them:
+
+  flash_attention:  base     — online-softmax Pallas kernel (kernel.py)
+                    chunked  — two-pass lazy-softmax Pallas variant
+                               (chunked.py): no accumulator rescale,
+                               K read twice
+                    xla      — lowerable chunked XLA fallback
+                               (repro.models.attention, (B,S,H,D) layout)
+  ssd_scan:         base     — Pallas chunked scan (kernel.py)
+                    blocked  — pure-jnp chunked block decomposition
+                               (repro.models.ssm.ssd_ref)
+                    sequential — naive jax.lax.scan recurrence (ref.py)
+
+``variant_names(family)`` is the selectable set (base first);
+``implementation(family, name)`` the callable. ``register_family``
+bridges a family into a :class:`repro.core.variants.VariantRegistry`
+under a task name — the caller supplies *measured* per-core-type weight
+multipliers (from ``repro.control.calibrate.fit_variant_multipliers`` or
+a benchmark sweep; this module never assumes them), and the catalog
+contributes the runtime callable so a plan that selects the variant can
+instantiate it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+from repro.kernels.flash_attention.chunked import chunked_attention_tpu
+from repro.kernels.flash_attention.kernel import flash_attention_tpu
+from repro.kernels.ssd_scan.kernel import ssd_tpu
+from repro.kernels.ssd_scan.ref import ssd_ref_sequential
+from repro.models.attention import flash_attention_xla
+from repro.models.ssm import ssd_ref
+
+#: family -> {variant name -> implementation}; "base" first, selection
+#: order is enumeration order (deterministic, like VariantRegistry.names).
+FAMILIES: dict[str, dict[str, Callable]] = {
+    "flash_attention": {
+        "base": flash_attention_tpu,
+        "chunked": chunked_attention_tpu,
+        "xla": flash_attention_xla,
+    },
+    "ssd_scan": {
+        "base": ssd_tpu,
+        "blocked": ssd_ref,
+        "sequential": ssd_ref_sequential,
+    },
+}
+
+
+def variant_names(family: str) -> tuple[str, ...]:
+    """Selectable implementation names of ``family``, base first."""
+    try:
+        return tuple(FAMILIES[family])
+    except KeyError:
+        raise KeyError(f"unknown kernel family {family!r} "
+                       f"(have {sorted(FAMILIES)})") from None
+
+
+def implementation(family: str, name: str) -> Callable:
+    """The callable implementing variant ``name`` of ``family``."""
+    impls = FAMILIES[family] if family in FAMILIES else None
+    if impls is None or name not in impls:
+        raise KeyError(f"unknown variant {family}/{name} "
+                       f"(have {variant_names(family) if impls else ()})")
+    return impls[name]
+
+
+def register_family(registry, task: str, family: str,
+                    multipliers: Mapping[str, tuple[float, float]],
+                    ) -> list:
+    """Register ``family``'s non-base variants for ``task``.
+
+    ``multipliers`` maps variant name -> measured (big, little) weight
+    multipliers; every non-base variant of the family must be covered
+    (pass only the variants you measured to register a subset). Returns
+    the :class:`repro.core.variants.TaskVariant` registrations.
+    """
+    out = []
+    for name, (big, little) in multipliers.items():
+        fn = implementation(family, name)  # validates family/name
+        if name == "base":
+            raise ValueError("the base implementation is the task itself; "
+                             "register only non-base variants")
+        out.append(registry.register(task, name, big=big, little=little,
+                                     fn=fn))
+    return out

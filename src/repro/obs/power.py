@@ -445,13 +445,20 @@ def synthesize_powermetrics(
 class CaptureWindow:
     """One aligned measurement window: what ran (allocated and busy
     core-seconds) against what was drawn (measured joules) — exactly the
-    row shape ``repro.control.calibrate.TraceSample`` fits from."""
+    row shape ``repro.control.calibrate.TraceSample`` fits from.
+
+    ``variant`` names the kernel variant whose busy time dominated the
+    window ("base" when spans carry no variant annotation), so
+    calibration can fit per-variant power/weight figures from a capture
+    that sweeps implementations
+    (``repro.control.calibrate.samples_from_capture(by_variant=True)``)."""
 
     t0: float
     t1: float
     alloc_s: Mapping[str, float]
     busy_s: Mapping[tuple[str, float], float]
     energy_j: float
+    variant: str = "base"
 
 
 def windows_from_schedule(
@@ -512,6 +519,7 @@ def capture_windows_from_trace(
         if w1 <= w0:
             continue
         busy: dict[tuple[str, float], float] = {}
+        var_busy: dict[str, float] = {}
         active: set[str] = set()
         for e in frame_spans:
             name = e.get("name")
@@ -525,6 +533,11 @@ def capture_windows_from_trace(
                 continue
             key = (info["ctype"], float(info.get("freq", 1.0)))
             busy[key] = busy.get(key, 0.0) + overlap
+            # kernel-variant attribution: the span's own annotation wins
+            # (runtime workers stamp non-base variants), else the plan's
+            variant = (e.get("args") or {}).get("variant") \
+                or info.get("variant", "base")
+            var_busy[variant] = var_busy.get(variant, 0.0) + overlap
             active.add(name)
         alloc: dict[str, float] = {}
         for name in active:
@@ -538,8 +551,10 @@ def capture_windows_from_trace(
             total_v = sum(x for (vv, _), x in busy.items() if vv == v)
             if total_v > cap_s > 0.0:
                 busy[(v, f)] = s * cap_s / total_v
+        dominant = max(var_busy, key=var_busy.get) if var_busy else "base"
         out.append(CaptureWindow(
             t0=w0, t1=w1, alloc_s=alloc, busy_s=busy,
             energy_j=capture.energy_between(w0 + offset_s, w1 + offset_s,
-                                            domain)))
+                                            domain),
+            variant=dominant))
     return out

@@ -5,7 +5,9 @@ trace written by :func:`repro.obs.export.write_perfetto` and compute
 
   - **per-stage utilization** — busy fraction of each stage's replica
     rows over the trace extent (frame-span durations summed per stage,
-    divided by replicas x extent);
+    divided by replicas x extent), plus the busy-dominant kernel
+    variant (frame spans stamp a ``variant`` arg when the plan chose a
+    non-base implementation);
   - **replica imbalance** — max/mean frames processed across a stage's
     replicas (work stealing should keep this near 1; a straggler shows
     up as the *other* replicas' ratio rising);
@@ -57,6 +59,11 @@ class StageStats:
     mean_queue_wait_s: float     # mean per-frame wait_s arg, 0 if absent
     p99_frame_s: float = 0.0     # p99 frame-span duration
     p99_period_s: float = 0.0    # p99 gap between span starts per replica
+    # busy-dominant kernel variant over the stage's frame spans ("base"
+    # when spans carry no variant arg). A plan swap that changes the
+    # implementation rather than the replica count shows up here, so
+    # trace diffs can tell the two apart.
+    variant: str = "base"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,8 +102,10 @@ class TraceReport:
                      f"{'busy_s':>8} {'util':>6} {'imbal':>6} "
                      f"{'q_wait_ms':>9}")
         for s in self.stages:
+            label = s.name if s.variant == "base" \
+                else f"{s.name}#{s.variant}"
             lines.append(
-                f"  {s.name:>12} {s.replicas:>4} {s.frames:>7} "
+                f"  {label:>12} {s.replicas:>4} {s.frames:>7} "
                 f"{s.busy_s:>8.3f} {s.utilization:>6.1%} "
                 f"{s.imbalance:>6.2f} {1e3 * s.mean_queue_wait_s:>9.3f}")
         for d in self.decisions:
@@ -194,6 +203,11 @@ def analyze_trace(events: list[dict]) -> TraceReport:
         periods = [(b - a) / 1e6
                    for starts in starts_by_tid.values()
                    for a, b in zip(sorted(starts), sorted(starts)[1:])]
+        var_busy: dict[str, float] = {}
+        for e in spans:
+            var = (e.get("args") or {}).get("variant") or "base"
+            var_busy[var] = var_busy.get(var, 0.0) + e.get("dur", 0.0)
+        variant = max(var_busy, key=var_busy.get) if var_busy else "base"
         stages.append(StageStats(
             name=name,
             replicas=replicas,
@@ -206,6 +220,7 @@ def analyze_trace(events: list[dict]) -> TraceReport:
             mean_queue_wait_s=sum(waits) / len(waits) if waits else 0.0,
             p99_frame_s=_p99([e.get("dur", 0.0) / 1e6 for e in spans]),
             p99_period_s=_p99(periods),
+            variant=variant,
         ))
 
     # ------------------------------------------------- governor decisions

@@ -139,22 +139,28 @@ class PipelinePlan:
         return self.tokens_per_step / (self.period_us * 1e-6)
 
     def stage_table(self) -> list[dict]:
-        """One dict per stage; DVFS plans add a ``freq`` column."""
+        """One dict per stage; DVFS plans add ``freq`` and ``variant``
+        columns (variant-aware weights via ``FreqStage.weight``)."""
         rows = []
         freq_stages = self.freq_solution.stages if self.freq_solution \
             else (None,) * len(self.solution.stages)
         for st, fst in zip(self.solution.stages, freq_stages):
-            weight = self.chain.weight(st.start, st.end, st.cores, st.ctype)
+            if fst is None:
+                weight = self.chain.weight(st.start, st.end, st.cores,
+                                           st.ctype)
+            else:
+                weight = fst.weight(self.chain, self.freq_solution.variants)
             row = {
                 "tasks": [self.chain.names[i]
                           for i in range(st.start, st.end + 1)],
                 "n_tasks": st.n_tasks(),
                 "devices": st.cores,
                 "class": "big" if st.ctype == BIG else "little",
-                "weight_us": weight if fst is None else weight / fst.freq,
+                "weight_us": weight,
             }
             if fst is not None:
                 row["freq"] = fst.freq
+                row["variant"] = fst.variant
             rows.append(row)
         return rows
 
@@ -189,7 +195,7 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
                   tokens_per_step: int, mode: str = "decode",
                   strategy: str = "herad", power=None,
                   power_cap_w: float | None = None,
-                  frontier=None) -> PipelinePlan:
+                  frontier=None, variants=None) -> PipelinePlan:
     """Schedule ``cfg``'s layer chain onto ``system``.
 
     For the energy-constrained ``strategy="energad"`` the optional
@@ -207,6 +213,14 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
     equals nominal HeRAD's optimum (top level = 1.0), so DVFS only
     spends slack, never throughput.
 
+    ``strategy="variant_herad"`` adds the kernel-variant axis on top:
+    ``variants`` (a ``repro.core.variants.VariantSpec`` resolved against
+    the model chain, or a ``VariantRegistry`` to resolve here) supplies
+    the measured per-variant per-class weight multipliers, and each stage
+    additionally picks its implementation. The plan's ``freq_solution``
+    stages carry ``variant`` names, ``stage_table()`` gains a ``variant``
+    column, and the runtime instantiates the registered callables.
+
     ``power_cap_w`` plans under an operator power cap instead: the
     fastest (period, energy) Pareto-frontier point whose average draw
     fits under the cap (``repro.energy.pareto.min_period_under_power``,
@@ -223,9 +237,12 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
     """
     chain, _ = model_chain(cfg, tokens_per_step=tokens_per_step, mode=mode,
                            system=system)
+    if variants is not None and hasattr(variants, "spec_for"):
+        variants = variants.spec_for(chain)  # accept a VariantRegistry
     if power_cap_w is not None:
         return _plan_under_cap(cfg, chain, system, tokens_per_step,
-                               strategy, power, power_cap_w, frontier)
+                               strategy, power, power_cap_w, frontier,
+                               variants)
     if strategy == "energad":
         from repro.energy.model import PowerModel
         from repro.energy.pareto import energad
@@ -252,6 +269,21 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
                 f"b={system.big.count}, l={system.little.count}")
         return PipelinePlan(fsol.to_solution(), chain, fsol.period(chain),
                             tokens_per_step, freq_solution=fsol)
+    elif strategy == "variant_herad":
+        from repro.energy.model import DEFAULT_DVFS_POWER, PowerModel
+        from repro.energy.pareto import variant_herad
+
+        if power is None:
+            power = PowerModel.from_device_classes(
+                system, freq_levels=DEFAULT_DVFS_POWER.freq_levels)
+        fsol = variant_herad(chain, system.big.count, system.little.count,
+                             power=power, variants=variants)
+        if fsol.is_empty():
+            raise ValueError(
+                f"no feasible schedule for {cfg.name} on "
+                f"b={system.big.count}, l={system.little.count}")
+        return PipelinePlan(fsol.to_solution(), chain, fsol.period(chain),
+                            tokens_per_step, freq_solution=fsol)
     else:
         sol = STRATEGIES[strategy](chain, system.big.count,
                                    system.little.count)
@@ -264,20 +296,23 @@ def plan_pipeline(cfg: ModelConfig, *, system: HeterogeneousSystem,
 
 def _plan_under_cap(cfg, chain, system: HeterogeneousSystem,
                     tokens_per_step: int, strategy: str, power,
-                    power_cap_w: float, frontier=None) -> PipelinePlan:
+                    power_cap_w: float, frontier=None,
+                    variants=None) -> PipelinePlan:
     """Fastest frontier plan with average draw <= ``power_cap_w``."""
     from repro.core.dvfs import FreqSolution
     from repro.energy.model import DEFAULT_DVFS_POWER, PowerModel
     from repro.energy.pareto import min_period_under_power
 
-    dvfs = strategy == "freqherad"
+    use_variants = strategy == "variant_herad" and variants is not None
+    dvfs = strategy in ("freqherad", "variant_herad")
     if power is None:
         power = PowerModel.from_device_classes(
             system,
             freq_levels=DEFAULT_DVFS_POWER.freq_levels if dvfs else (1.0,))
     pt = min_period_under_power(chain, system.big.count, system.little.count,
                                 power, power_cap_w, dvfs=dvfs,
-                                frontier=frontier)
+                                frontier=frontier,
+                                variants=variants if use_variants else None)
     if pt is None:
         raise ValueError(
             f"no schedule for {cfg.name} fits under {power_cap_w} W on "

@@ -113,6 +113,10 @@ class StageSpec:
     # throttle to it when < 1 (each frame costs busy/f wall seconds);
     # set by _specs_from_plan(enforce_freq=True), 1.0 = full speed.
     freq: float = 1.0
+    # kernel variant the plan chose for this stage ("base" = the default
+    # implementation). Set by _specs_from_plan from FreqStage.variant;
+    # carried into frame trace spans so variant swaps are observable.
+    variant: str = "base"
 
 
 class _Sentinel:
@@ -142,24 +146,44 @@ def _call_builder(builder: Callable, st) -> Callable:
     return builder(st.start, st.end)
 
 
-def _pin_replica_core(device_class: str, ri: int) -> None:
+def _affinity_pools(cpus: list[int],
+                    core_map: dict | None) -> dict[str, list[int]]:
+    """Per-class core-id pools from an explicit map or the halves policy.
+
+    ``core_map`` is ``{"big": [ids...], "little": [ids...]}`` — the
+    per-SoC override (e.g. ``repro.configs.dvbs2.core_map``) for hosts
+    whose clusters are NOT contiguous-low-half-first. Ids outside the
+    current affinity mask are dropped; an empty surviving pool falls back
+    to the whole mask. Without a map, the default policy stands: the low
+    half of the mask is the big cluster, the high half the little one
+    (clusters are contiguous in core numbering on the big.LITTLE SoCs
+    the paper targets)."""
+    if core_map is not None:
+        avail = set(cpus)
+        pools = {}
+        for cls in ("big", "little"):
+            pool = [c for c in core_map.get(cls, ()) if c in avail]
+            pools[cls] = pool or cpus
+        return pools
+    half = (len(cpus) + 1) // 2
+    return {"big": cpus[:half], "little": cpus[half:] or cpus}
+
+
+def _pin_replica_core(device_class: str, ri: int,
+                      core_map: dict | None = None) -> None:
     """Pin the calling process to one core of its replica's class.
 
-    Policy: the low half of the affinity mask stands in for the big
-    cluster, the high half for the little one (clusters are contiguous
-    in core numbering on the big.LITTLE SoCs the paper targets).
-    Replicas round-robin within their half. No-op when the host exposes
-    fewer than two cores or no affinity API."""
+    The per-class pools come from :func:`_affinity_pools` (explicit
+    ``core_map`` override, or low-half-big / high-half-little by
+    default). Replicas round-robin within their pool. No-op when the
+    host exposes fewer than two cores or no affinity API."""
     try:
         cpus = sorted(os.sched_getaffinity(0))
     except (AttributeError, OSError):
         return
     if len(cpus) < 2:
         return
-    half = (len(cpus) + 1) // 2
-    pool = cpus[:half] if device_class == "big" else cpus[half:]
-    if not pool:
-        pool = cpus
+    pool = _affinity_pools(cpus, core_map)[device_class]
     try:
         os.sched_setaffinity(0, {pool[ri % len(pool)]})
     except OSError:
@@ -194,7 +218,7 @@ class StreamingPipelineRuntime:
     def __init__(self, stages: Sequence[StageSpec], queue_depth: int = 8,
                  on_event: Callable[[str, dict], None] | None = None,
                  tracer=None, executor: str = "thread",
-                 slot_bytes: int = 1 << 16):
+                 slot_bytes: int = 1 << 16, core_map: dict | None = None):
         if executor not in ("thread", "process"):
             raise ValueError(f"unknown executor {executor!r} "
                              "(expected 'thread' or 'process')")
@@ -204,6 +228,9 @@ class StreamingPipelineRuntime:
         self.tracer = tracer         # repro.obs.Tracer or None
         self.executor = executor
         self.slot_bytes = slot_bytes
+        # optional explicit {"big": [core ids], "little": [core ids]}
+        # affinity override for process workers (see _affinity_pools)
+        self.core_map = core_map
         self._queues: list = []      # current input set's queues + [sink]
         self._threads: list[threading.Thread] = []  # live thread workers
         self._sets: list[_StageSet] = []            # live generations
@@ -241,6 +268,8 @@ class StreamingPipelineRuntime:
         tracing = tracer is not None and tracer.enabled
         if tracing:
             tracer.set_thread_name(f"{spec.name}/r{ri}")
+        span_extra = {} if spec.variant == "base" \
+            else {"variant": spec.variant}
         key = (spec.name, ri)
         sink = self._sink
         while True:
@@ -278,7 +307,8 @@ class StreamingPipelineRuntime:
                 # the hot path is one ring append per (frame, stage)
                 tracer.complete(spec.name, t_busy0, t_done - t_busy0,
                                 cat="frame",
-                                args={"seq": seq, "wait_s": t_busy0 - t_enq})
+                                args={"seq": seq, "wait_s": t_busy0 - t_enq,
+                                      **span_extra})
             if q_out is not None:
                 q_out.put((seq, result, t_done))
             else:
@@ -293,7 +323,7 @@ class StreamingPipelineRuntime:
         from repro.obs.trace import _Ring
 
         spec = ss.specs[si]
-        _pin_replica_core(spec.device_class, ri)
+        _pin_replica_core(spec.device_class, ri, self.core_map)
         delay = spec.delays[ri] if ri < len(spec.delays) else 0.0
         throttle = (1.0 / spec.freq - 1.0) \
             if 0.0 < spec.freq < 1.0 - 1e-12 else 0.0
@@ -335,8 +365,11 @@ class StreamingPipelineRuntime:
             stats[base + 1] += t_busy0 - t_enq
             stats[base + 2] += 1.0
             if tracing:
+                args = {"seq": seq, "wait_s": t_busy0 - t_enq}
+                if spec.variant != "base":
+                    args["variant"] = spec.variant
                 ring.append(("X", spec.name, t_busy0, t_done - t_busy0,
-                             "frame", {"seq": seq, "wait_s": t_busy0 - t_enq}))
+                             "frame", args))
             if q_out is not None:
                 q_out.put(seq, result, t_done)
             else:
@@ -718,13 +751,31 @@ class StreamingPipelineRuntime:
         can scale latencies by 1/f. With ``enforce_freq`` the chosen
         frequency is instead driven into the workers themselves
         (duty-cycle throttling) — for real stage fns whose builders don't
-        simulate DVFS."""
+        simulate DVFS.
+
+        Variant plans (stages carrying a non-base ``FreqStage.variant``
+        with a ``VariantSpec`` on the solution) instantiate the chosen
+        implementation: if any task in the stage registered a callable
+        factory for the chosen variant (``TaskVariant.fn``, same
+        ``(start, end[, stage])`` calling convention as a stage builder),
+        the first such factory builds the stage fn instead of the base
+        builder; otherwise the base builder runs and can itself branch on
+        ``stage.variant`` (three-argument builders see it)."""
         freq_solution = getattr(plan, "freq_solution", None)
         stages = freq_solution.stages if freq_solution is not None \
             else plan.solution.stages
+        variants = getattr(freq_solution, "variants", None)
         specs = []
         for st in stages:
-            fn = _call_builder(stage_fn_builder, st)
+            variant = getattr(st, "variant", "base")
+            builder = stage_fn_builder
+            if variants is not None and variant != "base":
+                for ti in range(st.start, st.end + 1):
+                    vfn = variants.fn_for(plan.chain.names[ti], variant)
+                    if vfn is not None:
+                        builder = vfn
+                        break
+            fn = _call_builder(builder, st)
             freq = getattr(st, "freq", 1.0)
             specs.append(StageSpec(
                 name=f"s{st.start}-{st.end}",
@@ -734,6 +785,7 @@ class StreamingPipelineRuntime:
                 busy_watts=power.busy_watts(st.ctype, freq) if power else 0.0,
                 idle_watts=power.idle_watts(st.ctype) if power else 0.0,
                 freq=freq if enforce_freq else 1.0,
+                variant=variant,
             ))
         return specs
 
@@ -858,6 +910,7 @@ class StreamingPipelineRuntime:
                   on_event: Callable[[str, dict], None] | None = None,
                   tracer=None, executor: str = "thread",
                   slot_bytes: int = 1 << 16, enforce_freq: bool = False,
+                  core_map: dict | None = None,
                   ) -> "StreamingPipelineRuntime":
         """Materialize stage workers from a PipelinePlan.
 
@@ -877,11 +930,13 @@ class StreamingPipelineRuntime:
         drives each stage's planned ``FreqStage.freq`` into its workers
         as duty-cycle throttling (don't combine with builders that
         already scale latency by 1/f, like the sim's
-        ``sleep_stage_builder``)."""
+        ``sleep_stage_builder``). ``core_map`` overrides the process
+        executor's big/little affinity pools with explicit core ids
+        (e.g. ``repro.configs.dvbs2.core_map``)."""
         rt = cls(cls._specs_from_plan(plan, stage_fn_builder, power,
                                       enforce_freq),
                  queue_depth=queue_depth, on_event=on_event, tracer=tracer,
-                 executor=executor, slot_bytes=slot_bytes)
+                 executor=executor, slot_bytes=slot_bytes, core_map=core_map)
         rt._builder = stage_fn_builder
         rt._power = power
         rt._enforce_freq = enforce_freq

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.flash_attention.chunked import chunked_attention_tpu
 from repro.kernels.flash_attention.kernel import flash_attention_tpu
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.kernel import ssd_tpu
@@ -67,6 +68,52 @@ def test_ssd_kernel(case, dtype):
     assert y.shape == x.shape
     assert float(jnp.abs(y.astype(jnp.float32) - yr).max()) < tol
     assert float(jnp.abs(s - sr).max()) < tol
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunked_attention_variant(case, dtype):
+    """The two-pass lazy-softmax variant computes the same function as
+    the oracle on every flash case — the certification that lets the
+    scheduler treat it as a selectable implementation of the family."""
+    b, hq, hkv, sq, skv, d, causal, window, bq, bk = case
+    q, k, v = _qkv(b, hq, hkv, sq, skv, d, dtype)
+    out = chunked_attention_tpu(q, k, v, causal=causal, window=window,
+                                bq=bq, bk=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert out.shape == (b, hq, sq, d)
+    assert float(jnp.abs(out.astype(jnp.float32) -
+                         ref.astype(jnp.float32)).max()) < tol
+
+
+def test_kernel_registry_catalog():
+    """Every family exposes >= 3 selectable implementations, base first,
+    and the registry bridges measured multipliers into a VariantSpec."""
+    from repro.core.variants import VariantRegistry
+    from repro.kernels import registry
+
+    for family in ("flash_attention", "ssd_scan"):
+        names = registry.variant_names(family)
+        assert len(names) >= 3 and names[0] == "base"
+        for name in names:
+            assert callable(registry.implementation(family, name))
+    assert registry.implementation("flash_attention", "chunked") \
+        is chunked_attention_tpu
+    with pytest.raises(KeyError):
+        registry.variant_names("conv")
+    with pytest.raises(KeyError):
+        registry.implementation("flash_attention", "nope")
+
+    reg = VariantRegistry()
+    out = registry.register_family(reg, "Attn.apply", "flash_attention",
+                                   {"chunked": (1.3, 0.82)})
+    assert len(out) == 1
+    tv = reg.get("Attn.apply", "chunked")
+    assert tv.mult_big == 1.3 and tv.fn is chunked_attention_tpu
+    with pytest.raises(ValueError):
+        registry.register_family(reg, "Attn.apply", "flash_attention",
+                                 {"base": (1.0, 1.0)})
 
 
 def test_xla_flash_matches_kernel_math():

@@ -46,7 +46,10 @@ from repro.energy import (
     sweep_budgets_freq,
     sweep_budgets_freq_reference,
     sweep_budgets_reference,
+    sweep_budgets_variant,
+    sweep_budgets_variant_reference,
 )
+from repro.core.variants import VariantRegistry
 from repro.energy.pareto import _non_dominated
 
 LADDERS = [
@@ -64,6 +67,18 @@ def _chain(seed, n=6, sr=0.5):
 def _model(ladder):
     return PowerModel("equiv", DEFAULT_POWER.big, DEFAULT_POWER.little,
                       freq_levels=ladder)
+
+
+def _vspec(chain, seed, k):
+    """k random non-base variants covering every task (k=0: trivial)."""
+    rng = np.random.default_rng(20_000 + seed)
+    reg = VariantRegistry()
+    for ki in range(k):
+        for task in chain.names:
+            reg.register(task, f"v{ki}",
+                         big=float(rng.uniform(0.6, 1.5)),
+                         little=float(rng.uniform(0.6, 1.5)))
+    return reg.spec_for(chain)
 
 
 def _assert_points_equal(fast, ref):
@@ -188,6 +203,64 @@ def test_sweep_budgets_freq_matches_reference(seed, n, sr, b, l, ladder):
     _assert_points_equal(
         sweep_budgets_freq(chain, b, l, power),
         sweep_budgets_freq_reference(chain, b, l, power))
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 5),
+    sr=st.sampled_from([0.0, 0.5, 1.0]),
+    b=st.integers(0, 3),
+    l=st.integers(0, 3),
+    ladder=st.sampled_from(LADDERS),
+    k=st.integers(0, 2),
+    stretch=st.sampled_from([0.8, 1.0, 2.0]),
+)
+def test_min_energy_dp_variant_matches_reference(seed, n, sr, b, l,
+                                                 ladder, k, stretch):
+    """The 4-axis DP (kernel-variant candidates on top of the ladder) is
+    bit-identical to its scalar reference; k=0 exercises the trivial
+    spec, which must match the pre-variant path exactly."""
+    chain = _chain(seed, n, sr)
+    power = _model(ladder)
+    spec = _vspec(chain, seed, k)
+    if b + l == 0:
+        p_max = 100.0
+    else:
+        opt = herad(chain, b, l)
+        p_max = opt.period(chain) * stretch if not opt.is_empty() else 50.0
+    fast = min_energy_under_period_freq(chain, b, l, p_max, power,
+                                        variants=spec)
+    ref = min_energy_under_period_freq_reference(chain, b, l, p_max,
+                                                 power, variants=spec)
+    assert fast == ref  # stages, replicas, types, freqs, variants
+    if k == 0:
+        assert fast == min_energy_under_period_freq(chain, b, l, p_max,
+                                                    power)
+    if not fast.is_empty():
+        assert energy(chain, fast, power, period=p_max) == \
+            energy(chain, ref, power, period=p_max)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(1, 4),
+    sr=st.sampled_from([0.0, 0.5, 1.0]),
+    b=st.integers(0, 3),
+    l=st.integers(0, 3),
+    ladder=st.sampled_from(LADDERS),
+    k=st.integers(1, 2),
+)
+def test_sweep_budgets_variant_matches_reference(seed, n, sr, b, l,
+                                                 ladder, k):
+    chain = _chain(seed, n, sr)
+    power = _model(ladder)
+    spec = _vspec(chain, seed, k)
+    _assert_points_equal(
+        sweep_budgets_variant(chain, b, l, power, variants=spec),
+        sweep_budgets_variant_reference(chain, b, l, power,
+                                        variants=spec))
 
 
 @settings(deadline=None, max_examples=25)

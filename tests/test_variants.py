@@ -1,0 +1,715 @@
+"""The kernel-variant scheduling axis (repro.core.variants + the 4-axis
+planning/energy/control/runtime layers).
+
+Certifies the PR's contracts:
+  - registry/spec semantics (ordering, implicit base, identity fast
+    paths, immutable multiplier updates, fn catalog);
+  - scale_chain composes variant multipliers with 1/f;
+  - variant_herad is a strict generalization: single-variant specs (and
+    variants=None) reproduce freqherad bit for bit, and on n <= 4 chains
+    the 4-axis optimum matches an exhaustive oracle over
+    (decomposition x type x count x level x variant);
+  - the vectorized 4-axis DP and budget sweep are bit-identical to their
+    retained scalar references;
+  - the DVB-S2 preset's 4-axis frontier weakly dominates every
+    fixed-variant frontier, strictly at >= 1 cap, and the planner
+    switches variants across a cap sweep;
+  - calibration fits per-variant per-core-type multipliers from
+    measurement; the governor recalibrates the active variant only;
+  - planner plumbing (strategy="variant_herad", stage_table column) and
+    runtime plumbing (variant-callable stage builders, explicit
+    affinity core maps).
+"""
+import math
+from itertools import combinations
+
+import numpy as np
+import pytest
+
+from repro.configs import dvbs2
+from repro.control import ConstantBudget, Governor, Observation
+from repro.control.calibrate import (
+    VariantObservation,
+    fit_variant_multipliers,
+    observations_from_run,
+    samples_from_capture,
+)
+from repro.core import (
+    BIG,
+    LITTLE,
+    DEFAULT_VARIANT,
+    STRATEGIES,
+    TaskChain,
+    TaskVariant,
+    VariantRegistry,
+    VariantSpec,
+    make_chain,
+    scale_chain,
+)
+from repro.energy import (
+    DEFAULT_POWER,
+    CoreTypePower,
+    PowerModel,
+    dvfs_frontier,
+    energy,
+    freqherad,
+    min_energy_under_period_freq,
+    min_energy_under_period_freq_reference,
+    min_period_under_power,
+    sweep_budgets_freq,
+    sweep_budgets_variant,
+    sweep_budgets_variant_reference,
+    variant_frontier,
+    variant_herad,
+)
+from repro.pipeline.runtime import (
+    StreamingPipelineRuntime,
+    _affinity_pools,
+)
+
+LEVELS2 = (0.6, 1.0)
+DVFS2 = PowerModel("test-dvfs2", DEFAULT_POWER.big, DEFAULT_POWER.little,
+                   freq_levels=LEVELS2)
+
+
+def _chain(seed=0, n=6, sr=0.5):
+    return make_chain(np.random.default_rng(seed), n, sr)
+
+
+def _spec(chain, seed=0, k=1):
+    """A spec with k random non-base variants covering every task."""
+    rng = np.random.default_rng(1000 + seed)
+    reg = VariantRegistry()
+    for ki in range(k):
+        for task in chain.names:
+            reg.register(task, f"v{ki}",
+                         big=float(rng.uniform(0.6, 1.5)),
+                         little=float(rng.uniform(0.6, 1.5)))
+    return reg.spec_for(chain)
+
+
+def _assert_points_equal(fast, ref):
+    assert len(fast) == len(ref)
+    for a, r in zip(fast, ref):
+        assert a.period == r.period          # bit-identical, no approx
+        assert a.energy == r.energy
+        assert a.budget == r.budget
+        assert a.solution == r.solution      # stages + freqs + variants
+
+
+# ========================================================== registry/spec
+def test_registry_names_base_first_registration_order():
+    reg = VariantRegistry()
+    reg.register("a", "slow", big=2.0)
+    reg.register("b", "fast", little=0.5)
+    reg.register("a", "fast", big=0.9)
+    assert reg.names == ("base", "slow", "fast")
+    # re-registration updates in place, order unchanged
+    reg.register("a", "slow", big=3.0)
+    assert reg.names == ("base", "slow", "fast")
+    assert reg.get("a", "slow").mult_big == 3.0
+    assert reg.get("a", "missing") is None
+    assert reg.get("c", "slow") is None
+
+
+def test_registry_rejects_base_and_bad_multipliers():
+    reg = VariantRegistry()
+    with pytest.raises(ValueError):
+        reg.register("a", DEFAULT_VARIANT, big=1.0)
+    with pytest.raises(ValueError):
+        TaskVariant("a", "v", mult_big=0.0)
+    with pytest.raises(ValueError):
+        TaskVariant("a", "v", mult_little=-1.0)
+    with pytest.raises(ValueError):
+        TaskVariant("a", DEFAULT_VARIANT, mult_big=1.2)
+
+
+def test_spec_for_resolves_against_chain_names():
+    ch = TaskChain(w_big=[1.0, 2.0, 3.0], w_little=[2.0, 4.0, 6.0],
+                   replicable=[True, True, True],
+                   names=("x", "y", "z"))
+    fn = object()
+    reg = VariantRegistry()
+    reg.register("y", "alt", big=1.5, little=0.7, fn=lambda s, e: fn)
+    spec = reg.spec_for(ch)
+    assert spec.names == ("base", "alt")
+    ki = spec.index("alt")
+    np.testing.assert_array_equal(spec.mult[BIG][ki], [1.0, 1.5, 1.0])
+    np.testing.assert_array_equal(spec.mult[LITTLE][ki], [1.0, 0.7, 1.0])
+    # unregistered tasks fall back to base weights (multiplier 1)
+    assert spec.fn_for("y", "alt")(0, 0) is fn
+    assert spec.fn_for("x", "alt") is None
+    assert spec.fn_for("y", "base") is None
+
+
+def test_spec_validation():
+    ones = np.ones((2, 2))
+    with pytest.raises(ValueError):   # base must come first
+        VariantSpec(("v", "base"), ("a", "b"), {BIG: ones, LITTLE: ones})
+    with pytest.raises(ValueError):   # duplicates
+        VariantSpec(("base", "base"), ("a", "b"),
+                    {BIG: ones, LITTLE: ones})
+    with pytest.raises(ValueError):   # shape mismatch
+        VariantSpec(("base", "v"), ("a", "b"),
+                    {BIG: np.ones((2, 3)), LITTLE: ones})
+    bad = ones.copy()
+    bad[1, 0] = -1.0
+    with pytest.raises(ValueError):   # non-positive multiplier
+        VariantSpec(("base", "v"), ("a", "b"), {BIG: bad, LITTLE: ones})
+    nonunit = ones.copy()
+    nonunit[0, 0] = 2.0
+    with pytest.raises(ValueError):   # base row must be the identity
+        VariantSpec(("base", "v"), ("a", "b"),
+                    {BIG: nonunit, LITTLE: ones})
+    with pytest.raises(KeyError):
+        VariantSpec.trivial(_chain()).index("nope")
+
+
+def test_scaled_identity_and_cache():
+    ch = _chain(1, n=5)
+    spec = _spec(ch, seed=1)
+    assert spec.scaled(ch, "base") is ch
+    out = spec.scaled(ch, "v0")
+    ki = spec.index("v0")
+    np.testing.assert_allclose(out.w[BIG], ch.w[BIG] * spec.mult[BIG][ki])
+    np.testing.assert_allclose(out.w[LITTLE],
+                               ch.w[LITTLE] * spec.mult[LITTLE][ki])
+    assert out.names == ch.names
+    np.testing.assert_array_equal(out.replicable, ch.replicable)
+    # cached per (chain, name): the same object comes back
+    assert spec.scaled(ch, "v0") is out
+    # an all-ones variant is recognized as the identity
+    reg = VariantRegistry()
+    reg.register(ch.names[0], "noop", big=1.0, little=1.0)
+    idspec = reg.spec_for(ch)
+    assert idspec.is_identity("noop")
+    assert idspec.scaled(ch, "noop") is ch
+
+
+def test_with_multipliers_replaces_one_row_only():
+    ch = _chain(2, n=4)
+    spec = _spec(ch, seed=2, k=2)
+    ki = spec.index("v1")
+    upd = spec.with_multipliers("v1", np.full(ch.n, 2.0),
+                                np.full(ch.n, 3.0))
+    np.testing.assert_array_equal(upd.mult[BIG][ki], np.full(ch.n, 2.0))
+    np.testing.assert_array_equal(upd.mult[LITTLE][ki], np.full(ch.n, 3.0))
+    # every other row (incl. base) carries over untouched
+    other = spec.index("v0")
+    np.testing.assert_array_equal(upd.mult[BIG][other],
+                                  spec.mult[BIG][other])
+    np.testing.assert_array_equal(upd.mult[BIG][0], np.ones(ch.n))
+    assert upd != spec and upd.names == spec.names
+    with pytest.raises(ValueError):
+        spec.with_multipliers("base", np.ones(ch.n), np.ones(ch.n))
+
+
+def test_trivial_spec_and_equality():
+    ch = _chain(3, n=4)
+    triv = VariantSpec.trivial(ch)
+    assert triv.is_trivial() and triv.n_variants == 1
+    assert triv.names == (DEFAULT_VARIANT,)
+    spec_a = _spec(ch, seed=3)
+    spec_b = _spec(ch, seed=3)
+    assert spec_a == spec_b       # fns excluded, multipliers compared
+    assert spec_a != triv
+    assert spec_a.multipliers("v0")[BIG].shape == (ch.n,)
+
+
+# ========================================================== scale_chain
+def test_scale_chain_composes_variant_and_frequency():
+    ch = _chain(4, n=5)
+    spec = _spec(ch, seed=4)
+    ki = spec.index("v0")
+    out = scale_chain(ch, f_big=0.5, f_little=0.8, variant="v0",
+                      variants=spec)
+    np.testing.assert_allclose(
+        out.w[BIG], ch.w[BIG] * spec.mult[BIG][ki] / 0.5)
+    np.testing.assert_allclose(
+        out.w[LITTLE], ch.w[LITTLE] * spec.mult[LITTLE][ki] / 0.8)
+    # base variant at nominal frequency is the chain itself
+    assert scale_chain(ch, variant=DEFAULT_VARIANT, variants=spec) is ch
+    with pytest.raises(ValueError):
+        scale_chain(ch, variant="v0")           # spec required
+    with pytest.raises(KeyError):
+        scale_chain(ch, variant="bogus", variants=spec)
+
+
+# =================================================== trivial specialization
+@pytest.mark.parametrize("seed", range(6))
+def test_variant_herad_trivial_is_freqherad_bitwise(seed):
+    """Satellite acceptance: a single-variant spec (or none at all)
+    specializes variant_herad to freqherad exactly — stages, levels,
+    period, energy — the same property energad ⊂ freqherad has."""
+    rng = np.random.default_rng(7000 + seed)
+    ch = _chain(seed, n=int(rng.integers(3, 8)),
+                sr=float(rng.uniform(0, 1)))
+    b, l = int(rng.integers(1, 4)), int(rng.integers(0, 3))
+    ref = freqherad(ch, b, l, power=DVFS2)
+    for spec in (None, VariantSpec.trivial(ch)):
+        got = variant_herad(ch, b, l, power=DVFS2, variants=spec)
+        assert got.stages == ref.stages      # bit-identical, no approx
+        assert got.period(ch) == ref.period(ch)
+        assert energy(ch, got, DVFS2) == energy(ch, ref, DVFS2)
+        assert got.variant_profile() == ("base",) * len(got.stages)
+
+
+def test_variant_herad_trivial_on_dvbs2():
+    ch = dvbs2.dvbs2_chain("mac")
+    power = dvbs2.platform_power("mac")
+    b, l = dvbs2.RESOURCES["mac"]["half"]
+    ref = freqherad(ch, b, l, power=power)
+    got = variant_herad(ch, b, l, power=power,
+                        variants=VariantSpec.trivial(ch))
+    assert got.stages == ref.stages
+    assert got.period(ch) == ref.period(ch)
+
+
+# ===================================================== brute-force oracle
+def _brute_variant(chain, b, l, levels, power, spec):
+    """Exhaustive lexicographic (period, energy) oracle over
+    (decomposition x core type x replica count x frequency level x
+    kernel variant) — tests/test_dvfs._brute_freq widened by the
+    per-stage variant loop."""
+    n = chain.n
+    assignments = []
+    K = spec.n_variants
+    for k in range(n):
+        for cuts in combinations(range(1, n), k):
+            bounds = [0, *cuts, n]
+            ivs = [(bounds[i], bounds[i + 1] - 1)
+                   for i in range(len(bounds) - 1)]
+
+            def rec(si, rb, rl, acc):
+                if si == len(ivs):
+                    assignments.append(tuple(acc))
+                    return
+                s, e = ivs[si]
+                rep = chain.is_rep(s, e)
+                for v, budget in ((BIG, rb), (LITTLE, rl)):
+                    max_u = budget if rep else min(1, budget)
+                    for u in range(1, max_u + 1):
+                        for f in levels:
+                            for ki in range(K):
+                                acc.append((s, e, u, v, f, ki))
+                                rec(si + 1, rb - u if v == BIG else rb,
+                                    rl - u if v == LITTLE else rl, acc)
+                                acc.pop()
+
+            rec(0, b, l, [])
+    assert assignments, "oracle found no feasible configuration"
+
+    def work_of(s, e, v, f, ki):
+        return float((chain.w[v][s:e + 1]
+                      * spec.mult[v][ki, s:e + 1]).sum()) / f
+
+    def period_of(cfg):
+        return max(work_of(s, e, v, f, ki) / u
+                   for (s, e, u, v, f, ki) in cfg)
+
+    p_star = min(period_of(cfg) for cfg in assignments)
+    best_e = math.inf
+    for cfg in assignments:
+        if period_of(cfg) > p_star * (1 + 1e-12):
+            continue
+        e_tot = 0.0
+        for (s, e, u, v, f, ki) in cfg:
+            work = work_of(s, e, v, f, ki)
+            e_tot += work * power.busy_watts(v, f) \
+                + max(u * p_star - work, 0.0) * power.idle_watts(v)
+        best_e = min(best_e, e_tot)
+    return p_star, best_e
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_variant_herad_matches_brute_force(trial):
+    """Acceptance: 4-axis optimality on n <= 4, 2 levels, 2 variants."""
+    rng = np.random.default_rng(600 + trial)
+    n = int(rng.integers(2, 5))
+    ch = make_chain(np.random.default_rng(trial), n,
+                    float(rng.uniform(0, 1)))
+    b, l = int(rng.integers(0, 3)), int(rng.integers(0, 3))
+    if b + l == 0:
+        b = 2
+    spec = _spec(ch, seed=trial, k=1)
+    p_star, e_star = _brute_variant(ch, b, l, LEVELS2, DVFS2, spec)
+    fsol = variant_herad(ch, b, l, power=DVFS2, variants=spec)
+    assert not fsol.is_empty()
+    assert fsol.covers(ch)
+    # lexicographic first key: the minimum achievable period
+    assert fsol.period(ch) <= p_star * (1 + 1e-9)
+    # second key: minimum energy among period-optimal assignments
+    e = energy(ch, fsol, DVFS2, period=p_star)
+    assert e == pytest.approx(e_star, rel=1e-9)
+
+
+def test_variant_herad_registered_strategy():
+    ch = _chain(5, n=5)
+    fsol = STRATEGIES["variant_herad"](ch, 2, 1)
+    assert fsol.covers(ch)
+    assert fsol.period(ch) == freqherad(ch, 2, 1).period(ch)
+
+
+# ================================================ vectorized vs reference
+@pytest.mark.parametrize("seed,n,sr,b,l,k", [
+    (0, 4, 0.5, 2, 1, 1),
+    (1, 5, 1.0, 1, 2, 2),
+    (2, 3, 0.0, 2, 2, 1),
+    (3, 6, 0.5, 3, 1, 2),
+    (4, 1, 1.0, 1, 1, 2),
+])
+def test_sweep_budgets_variant_matches_reference(seed, n, sr, b, l, k):
+    ch = _chain(seed, n=n, sr=sr)
+    spec = _spec(ch, seed=seed, k=k)
+    _assert_points_equal(
+        sweep_budgets_variant(ch, b, l, DVFS2, variants=spec),
+        sweep_budgets_variant_reference(ch, b, l, DVFS2, variants=spec))
+
+
+def test_sweep_budgets_variant_trivial_equals_freq_sweep():
+    ch = _chain(6, n=5)
+    for spec in (None, VariantSpec.trivial(ch)):
+        _assert_points_equal(
+            sweep_budgets_variant(ch, 2, 2, DVFS2, variants=spec),
+            sweep_budgets_freq(ch, 2, 2, DVFS2))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_variant_dp_matches_reference_bitwise(seed):
+    """The 4-axis min-energy DP replays the scalar oracle bit for bit
+    across bounds spanning tight to loose."""
+    rng = np.random.default_rng(8000 + seed)
+    ch = _chain(seed, n=int(rng.integers(2, 6)),
+                sr=float(rng.uniform(0, 1)))
+    b, l = int(rng.integers(1, 4)), int(rng.integers(0, 3))
+    spec = _spec(ch, seed=seed, k=2)
+    p0 = variant_herad(ch, b, l, power=DVFS2, variants=spec).period(ch)
+    for scale in (1.0, 1.3, 2.0, 5.0):
+        fast = min_energy_under_period_freq(
+            ch, b, l, p0 * scale, DVFS2, variants=spec)
+        ref = min_energy_under_period_freq_reference(
+            ch, b, l, p0 * scale, DVFS2, variants=spec)
+        assert fast.stages == ref.stages
+        assert energy(ch, fast, DVFS2) == energy(ch, ref, DVFS2)
+
+
+def test_variant_frontier_trivial_equals_dvfs_frontier():
+    ch = _chain(7, n=6)
+    vf = variant_frontier(ch, 2, 2, DVFS2, VariantSpec.trivial(ch))
+    df = dvfs_frontier(ch, 2, 2, DVFS2)
+    assert [(p.period, p.energy) for p in vf] \
+        == [(p.period, p.energy) for p in df]
+
+
+# ==================================================== DVB-S2 dominance
+def _weakly_dominates(front, pt, eps=1e-9):
+    return any(q.period <= pt.period + eps and q.energy <= pt.energy + eps
+               for q in front)
+
+
+def test_dvbs2_variant_frontier_dominates_fixed_variants():
+    """Tentpole acceptance: on the DVB-S2 mac/half preset the 4-axis
+    frontier (period, energy)-dominates both fixed-variant frontiers,
+    strictly at >= 1 point, and a cap sweep drives variant switches."""
+    ch = dvbs2.dvbs2_chain("mac")
+    power = dvbs2.platform_power("mac")
+    b, l = dvbs2.RESOURCES["mac"]["half"]
+    spec = dvbs2.variant_registry("mac").spec_for(ch)
+    vf = variant_frontier(ch, b, l, power, spec)
+    fixed = {
+        "base": dvfs_frontier(ch, b, l, power),
+        "chunked": dvfs_frontier(spec.scaled(ch, "chunked"), b, l, power),
+    }
+    assert len(vf) > 1
+    # weak dominance: no fixed-variant point beats the 4-axis frontier
+    for front in fixed.values():
+        for pt in front:
+            assert _weakly_dominates(vf, pt), \
+                f"4-axis frontier misses ({pt.period}, {pt.energy})"
+    # strict dominance somewhere: for EACH fixed frontier, some 4-axis
+    # point has strictly lower energy at no worse period
+    for name, front in fixed.items():
+        assert any(
+            any(q.period <= pt.period + 1e-9
+                and q.energy < pt.energy * (1 - 1e-6) for q in vf)
+            for pt in front), f"no strict win over fixed {name!r}"
+    # mixed per-stage assignments actually appear on the frontier
+    profiles = {pt.solution.variant_profile() for pt in vf}
+    assert any("chunked" in prof and "base" in prof for prof in profiles)
+    # cap sweep: the planner switches variants as the cap tightens
+    watts = [pt.energy / pt.period for pt in vf]
+    caps = np.linspace(min(watts) * 0.98, max(watts) * 1.05, 10)
+    seen = set()
+    for cap in caps:
+        pt = min_period_under_power(ch, b, l, power, float(cap),
+                                    variants=spec, frontier=vf)
+        if pt is not None:
+            seen.add(pt.solution.variant_profile())
+    assert len(seen) >= 2, "cap sweep never switched variants"
+    used = {v for prof in seen for v in prof}
+    assert {"base", "chunked"} <= used
+
+
+# ========================================================== calibration
+def test_variant_observation_validation_and_work():
+    ob = VariantObservation("chunked", BIG, busy_s=4.0, frames=8,
+                            freq=0.5)
+    assert ob.work_per_frame() == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        VariantObservation("v", BIG, busy_s=-1.0, frames=1)
+    with pytest.raises(ValueError):
+        VariantObservation("v", BIG, busy_s=1.0, frames=0)
+    with pytest.raises(ValueError):
+        VariantObservation("v", BIG, busy_s=1.0, frames=1, freq=0.0)
+
+
+def test_fit_variant_multipliers_ratios_and_pooling():
+    obs = [
+        VariantObservation("base", BIG, busy_s=10.0, frames=10),
+        VariantObservation("base", LITTLE, busy_s=30.0, frames=10),
+        # chunked on big: two windows pooled busy/frames-weighted ->
+        # (6+7)/(5+5) = 1.3 per frame vs base 1.0 -> m = 1.3
+        VariantObservation("chunked", BIG, busy_s=6.0, frames=5),
+        VariantObservation("chunked", BIG, busy_s=7.0, frames=5),
+        # chunked on little at half clock: busy*freq normalizes the
+        # nominal work -> 4.92*0.5/1 = 2.46 vs base 3.0 -> m = 0.82
+        VariantObservation("chunked", LITTLE, busy_s=4.92, frames=1,
+                           freq=0.5),
+    ]
+    fit = fit_variant_multipliers(obs)
+    assert fit["chunked"][BIG] == pytest.approx(1.3)
+    assert fit["chunked"][LITTLE] == pytest.approx(0.82)
+    # base-only observations fit nothing
+    assert fit_variant_multipliers(obs[:2]) == {}
+
+
+def test_fit_variant_multipliers_requires_base_on_same_type():
+    obs = [
+        VariantObservation("base", BIG, busy_s=10.0, frames=10),
+        VariantObservation("chunked", LITTLE, busy_s=5.0, frames=10),
+    ]
+    with pytest.raises(ValueError):
+        fit_variant_multipliers(obs)
+
+
+def test_observations_from_run_groups_by_variant_type_freq():
+    class Spec:
+        def __init__(self, name, device_class, variant, freq=1.0):
+            self.name = name
+            self.device_class = device_class
+            self.variant = variant
+            self.freq = freq
+
+    stages = [Spec("s0-1", "big", "base"),
+              Spec("s2-3", "big", "chunked", freq=0.5),
+              Spec("s4-4", "little", "chunked")]
+    stats = {
+        "busy_s": {("s0-1", 0): 2.0, ("s0-1", 1): 2.0,
+                   ("s2-3", 0): 3.0, ("s4-4", 0): 1.5},
+        "replica_frames": {("s0-1", 0): 5, ("s0-1", 1): 5,
+                           ("s2-3", 0): 10, ("s4-4", 0): 10},
+    }
+    obs = {(o.variant, o.ctype): o
+           for o in observations_from_run(stages, stats)}
+    assert obs[("base", BIG)].busy_s == pytest.approx(4.0)
+    assert obs[("base", BIG)].frames == 10
+    assert obs[("chunked", BIG)].freq == 0.5
+    # nominal work normalization: 3.0 busy at f=0.5 over 10 frames
+    assert obs[("chunked", BIG)].work_per_frame() == pytest.approx(0.15)
+    assert obs[("chunked", LITTLE)].busy_s == pytest.approx(1.5)
+
+
+def test_samples_from_capture_by_variant_grouping():
+    class Win:
+        def __init__(self, variant, alloc, busy, e):
+            self.variant = variant
+            self.alloc_s = alloc
+            self.busy_s = busy
+            self.energy_j = e
+
+    wins = [
+        Win("base", {BIG: 1.0}, {(BIG, 1.0): 0.5}, 2.0),
+        Win("chunked", {BIG: 1.0}, {(BIG, 1.0): 0.4}, 1.8),
+        Win(None, {LITTLE: 1.0}, {(LITTLE, 1.0): 0.7}, 1.0),
+        Win("chunked", {}, {}, 5.0),       # no allocation: skipped
+    ]
+    grouped = samples_from_capture(wins, by_variant=True)
+    assert set(grouped) == {"base", "chunked"}
+    assert len(grouped["base"]) == 2       # None lands under "base"
+    assert len(grouped["chunked"]) == 1
+    assert grouped["chunked"][0].energy_j == pytest.approx(1.8)
+    # flat mode unchanged
+    assert len(samples_from_capture(wins)) == 3
+
+
+# ============================================================= governor
+def _gov_chain():
+    return TaskChain(
+        w_big=[10.0, 40.0, 40.0, 10.0],
+        w_little=[25.0, 100.0, 100.0, 25.0],
+        replicable=[False, True, True, False],
+    )
+
+
+GOV_POWER = PowerModel("t", CoreTypePower(0.1, 0.9),
+                       CoreTypePower(0.03, 0.32), freq_levels=LEVELS2)
+
+
+def _gov_spec(ch, big=0.5, little=0.5):
+    reg = VariantRegistry()
+    for task in ch.names:
+        reg.register(task, "alt", big=big, little=little)
+    return reg.spec_for(ch)
+
+
+def test_governor_variants_plans_off_variant_frontier():
+    ch = _gov_chain()
+    spec = _gov_spec(ch)    # "alt" is 2x cheaper everywhere
+    gov = Governor(ch, 3, 2, GOV_POWER, ConstantBudget(1000.0),
+                   variants=spec)
+    assert gov.dvfs           # the variant axis implies the DVFS grid
+    ev = gov.start()
+    assert ev.cap_met
+    front = variant_frontier(ch, 3, 2, GOV_POWER, spec)
+    assert gov.plan.point == front[0]
+    # the uniformly-cheaper variant wins every stage of the fast plan
+    prof = gov.plan.point.solution.variant_profile()
+    assert set(prof) == {"alt"}
+
+
+def test_governor_drift_rescales_active_variant_only():
+    """A slow non-base stage recalibrates that variant's multipliers on
+    its own core type; the shared base weights stay untouched."""
+    ch = _gov_chain()
+    spec = _gov_spec(ch)
+    gov = Governor(ch, 3, 2, GOV_POWER, ConstantBudget(1000.0),
+                   variants=spec, drift_tolerance=0.2)
+    gov.start()
+    sol = gov.plan.point.solution
+    assert set(sol.variant_profile()) == {"alt"}
+    w_before = (gov.chain.w[BIG].copy(), gov.chain.w[LITTLE].copy())
+    # the "alt" implementation actually runs 1.5x its table everywhere
+    # (two windows: the first post-adopt measurement is never trusted)
+    ev = None
+    for t in (1.0, 2.0, 3.0):
+        ev = ev or gov.observe(Observation(
+            t=t, period=gov.plan.predicted_period * 1.5,
+            stage_busy={
+                f"s{st.start}-{st.end}": 1.5 * st.work(ch, spec)
+                for st in sol.stages}))
+    assert ev is not None and ev.trigger == "drift"
+    assert "variant" in ev.detail
+    # base weights untouched; alt multipliers rescaled where measured
+    np.testing.assert_array_equal(gov.chain.w[BIG], w_before[0])
+    np.testing.assert_array_equal(gov.chain.w[LITTLE], w_before[1])
+    ki = gov.variants.index("alt")
+    covered = np.zeros(ch.n, dtype=bool)
+    for st in sol.stages:
+        v = st.ctype
+        np.testing.assert_allclose(
+            gov.variants.mult[v][ki, st.start:st.end + 1],
+            spec.mult[v][ki, st.start:st.end + 1] * 1.5)
+        covered[st.start:st.end + 1] = True
+    assert covered.all()
+
+
+# ======================================================= planner plumbing
+def test_plan_pipeline_variant_herad_stage_table():
+    from repro.models.config import get_smoke_config
+    from repro.pipeline import HeterogeneousSystem, plan_pipeline
+
+    system = HeterogeneousSystem.default(4, 4)
+    cfg = get_smoke_config("gemma3-1b")
+    base = plan_pipeline(cfg, system=system, tokens_per_step=64,
+                         strategy="freqherad")
+    reg = VariantRegistry()
+    for task in base.chain.names:
+        reg.register(task, "lean", big=0.9, little=0.8)
+    plan = plan_pipeline(cfg, system=system, tokens_per_step=64,
+                         strategy="variant_herad", variants=reg)
+    assert plan.freq_solution is not None
+    assert plan.freq_solution.covers(plan.chain)
+    # a uniformly-cheaper variant can only improve the period
+    assert plan.period_us <= base.period_us * (1 + 1e-9)
+    rows = plan.stage_table()
+    assert all("variant" in r and "freq" in r for r in rows)
+    assert {r["variant"] for r in rows} <= {"base", "lean"}
+    assert any(r["variant"] == "lean" for r in rows)
+
+
+# ======================================================= runtime plumbing
+def test_affinity_pools_explicit_map_and_default():
+    cpus = list(range(8))
+    pools = _affinity_pools(cpus, {"big": [4, 5, 6, 7], "little": [0, 1]})
+    assert pools == {"big": [4, 5, 6, 7], "little": [0, 1]}
+    # ids outside the current mask are dropped
+    pools = _affinity_pools([0, 1, 2, 3],
+                            {"big": [2, 3, 9], "little": [0, 1]})
+    assert pools == {"big": [2, 3], "little": [0, 1]}
+    # an empty surviving pool falls back to the whole mask
+    pools = _affinity_pools([0, 1], {"big": [5, 6], "little": [0]})
+    assert pools == {"big": [0, 1], "little": [0]}
+    # no map: low half big, high half little (odd mask rounds big up)
+    assert _affinity_pools([0, 1, 2, 3, 4], None) \
+        == {"big": [0, 1, 2], "little": [3, 4]}
+    assert _affinity_pools([3], None) == {"big": [3], "little": [3]}
+
+
+def test_dvbs2_core_map_override():
+    cpus = list(range(20))
+    pools = _affinity_pools(cpus, dvbs2.core_map("x7"))
+    assert pools["big"] == list(range(0, 12))
+    assert pools["little"] == list(range(12, 20))
+    # the mac layout matches the default halves policy it documents
+    assert _affinity_pools(cpus, dvbs2.core_map("mac")) \
+        == {"big": list(range(16)), "little": [16, 17, 18, 19]}
+    with pytest.raises(ValueError):
+        dvbs2.core_map("nope")
+
+
+def test_specs_from_plan_instantiates_variant_callables():
+    from repro.core.dvfs import FreqSolution, FreqStage
+
+    ch = TaskChain(w_big=[5.0, 5.0, 5.0], w_little=[9.0, 9.0, 9.0],
+                   replicable=[True, True, True],
+                   names=("a", "b", "c"))
+    built = []
+
+    def alt_builder(start, end):
+        built.append((start, end))
+        return lambda x: ("alt", x)
+
+    reg = VariantRegistry()
+    reg.register("b", "alt", big=0.8, little=0.8, fn=alt_builder)
+    spec = reg.spec_for(ch)
+    fsol = FreqSolution((FreqStage(0, 0, 1, BIG, 1.0, "base"),
+                         FreqStage(1, 2, 2, BIG, 1.0, "alt")),
+                        variants=spec)
+
+    class FakePlan:
+        chain = ch
+        solution = fsol.to_solution()
+        freq_solution = fsol
+
+    def base_builder(start, end):
+        return lambda x: ("base", x)
+
+    specs = StreamingPipelineRuntime._specs_from_plan(FakePlan,
+                                                      base_builder)
+    assert [s.variant for s in specs] == ["base", "alt"]
+    assert built == [(1, 2)]      # the registered factory built stage 2
+    assert specs[0].fn(1) == ("base", 1)
+    assert specs[1].fn(1) == ("alt", 1)
+    # without a registered callable the base builder serves the variant
+    lone = FreqSolution((FreqStage(0, 2, 2, BIG, 1.0, "alt"),),
+                        variants=VariantSpec.trivial(ch))
+
+    class PlanNoFn:
+        chain = ch
+        solution = lone.to_solution()
+        freq_solution = lone
+
+    specs = StreamingPipelineRuntime._specs_from_plan(PlanNoFn,
+                                                      base_builder)
+    assert specs[0].variant == "alt"
+    assert specs[0].fn(2) == ("base", 2)

@@ -83,6 +83,13 @@ def summarize(report) -> dict[str, float]:
         out[f"stage.{s.name}.frames"] = float(s.frames)
         out[f"stage.{s.name}.p99_period_s"] = s.p99_period_s
         out[f"stage.{s.name}.p99_frame_s"] = s.p99_frame_s
+        # replica count and a one-hot variant flag per stage: a re-plan
+        # that swaps the kernel implementation moves the variant.* key,
+        # one that scales the stage moves replicas — the diff can tell
+        # the two apart instead of lumping both under frame-rate shifts.
+        out[f"stage.{s.name}.replicas"] = float(s.replicas)
+        out[f"stage.{s.name}.variant.{getattr(s, 'variant', 'base')}"] \
+            = 1.0
     return out
 
 
